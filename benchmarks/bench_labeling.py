@@ -1,0 +1,48 @@
+"""Paper §III.B.2: weak-supervision quality — LF coverage, conflict rate,
+abstain rate, and throughput of the labeling pass over the full dataset."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import labeling as L
+from repro.core import pipeline
+from repro.data import windows as W
+
+
+def main():
+    traces = common.get_traces()
+    ds = W.make_windows(traces)
+    X, y, conf = pipeline.featurize_and_label(ds)
+
+    votes = np.asarray(L.apply_lfs(jnp.asarray(X[:50000])))
+    fired = votes >= 0
+    coverage = fired.mean(axis=0)            # per-LF firing rate
+    # conflict: window where two LFs disagree (both fired, diff class)
+    n_conflict = 0
+    for row in votes:
+        v = row[row >= 0]
+        if len(v) > 1 and len(set(v.tolist())) > 1:
+            n_conflict += 1
+    us = common.timeit(
+        lambda: jax.block_until_ready(
+            L.weak_label(jnp.asarray(X[:8192]))), warmup=1, iters=3)
+
+    payload = {
+        "n_windows": int(len(ds)),
+        "abstain_rate": float((y < 0).mean()),
+        "mean_vote_confidence": float(conf[y >= 0].mean()),
+        "lf_coverage": {fn.__name__: float(c) for fn, c in
+                        zip(L.LABELING_FUNCTIONS, coverage)},
+        "conflict_rate": n_conflict / len(votes),
+        "label_us_per_window": us / 8192,
+    }
+    common.emit("weak_supervision", us / 8192,
+                f"abstain={payload['abstain_rate']:.3f}_conflict="
+                f"{payload['conflict_rate']:.3f}", payload)
+
+
+if __name__ == "__main__":
+    main()

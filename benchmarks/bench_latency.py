@@ -1,0 +1,50 @@
+"""Paper §IV.B: classification latency — 2.3 ms per window on their RTX
+3080. We measure the single-window path (features + GBDT + calibration)
+and the batched path on this CPU."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import calibration, gbdt
+from repro.core import features as F
+
+
+def main():
+    trained = common.get_trained()
+
+    @jax.jit
+    def classify_one(window):
+        feats = F.extract_features(window[None])
+        probs = jax.nn.softmax(gbdt.predict_logits(trained.params, feats))
+        cal = calibration.calibrate(trained.cal, probs)
+        return jnp.argmax(cal), jnp.max(cal)
+
+    w = jnp.asarray(np.random.default_rng(0).gamma(2, 10, 60), jnp.float32)
+    us_one = common.timeit(
+        lambda: jax.block_until_ready(classify_one(w)), warmup=2, iters=20)
+
+    @jax.jit
+    def classify_batch(windows):
+        feats = F.extract_features(windows)
+        probs = jax.nn.softmax(gbdt.predict_logits(trained.params, feats))
+        return jnp.argmax(calibration.calibrate(trained.cal, probs), -1)
+
+    wb = jnp.asarray(np.random.default_rng(1).gamma(2, 10, (4096, 60)),
+                     jnp.float32)
+    us_batch = common.timeit(
+        lambda: jax.block_until_ready(classify_batch(wb)), warmup=1,
+        iters=5)
+
+    payload = {"single_window_ms": us_one / 1e3,
+               "paper_ms": 2.3,
+               "batched_us_per_window": us_batch / 4096,
+               "batch_size": 4096}
+    common.emit("classification_latency", us_one,
+                f"ms_per_window={us_one/1e3:.2f}_paper=2.3", payload)
+
+
+if __name__ == "__main__":
+    main()

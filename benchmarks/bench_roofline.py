@@ -1,0 +1,54 @@
+"""§Roofline table: read the dry-run + probe JSONs and print the per
+(arch x shape) three-term roofline with dominant bottleneck."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+
+DRYRUN = pathlib.Path("experiments/dryrun/results.json")
+ROOFLINE = pathlib.Path("experiments/roofline/results.json")
+
+
+def main():
+    if not ROOFLINE.exists():
+        print("# roofline_probe: experiments/roofline/results.json missing"
+              " — run `python -m repro.launch.roofline` first")
+        common.emit("roofline", 0.0, "missing")
+        return
+    probes = json.loads(ROOFLINE.read_text())
+    dry = json.loads(DRYRUN.read_text()) if DRYRUN.exists() else {}
+
+    n_ok = 0
+    worst = (None, 1.1)
+    rows = []
+    for key, r in sorted(probes.items()):
+        if "error" in r:
+            rows.append(f"#  {key:45s} ERROR {r['error'][:60]}")
+            continue
+        n_ok += 1
+        frac = r["roofline_fraction"]
+        if frac < worst[1]:
+            worst = (key, frac)
+        mem_ok = ""
+        dr = dry.get(f"{r['arch']}|{r['shape']}|single", {})
+        if dr.get("ok"):
+            tot = (dr["memory"]["argument_bytes"]
+                   + dr["memory"]["temp_bytes"]) / 1e9
+            mem_ok = f"mem={tot:.1f}GB"
+        rows.append(
+            f"#  {key:45s} dom={r['dominant']:10s} "
+            f"comp={r['compute_s']:.2e} mem={r['memory_s']:.2e} "
+            f"coll={r['collective_s']:.2e} frac={frac:.3f} "
+            f"useful={r['useful_flop_ratio']:.2f} {mem_ok}")
+
+    common.emit("roofline", 0.0,
+                f"cells={n_ok}_worst_frac={worst[1]:.3f}@{worst[0]}",
+                {"cells": probes})
+    for row in rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Shared benchmark infrastructure: the paper-scale dataset + trained
+classifier, cached under experiments/cache so every table reuses them."""
+from __future__ import annotations
+
+import json
+import pathlib
+import pickle
+import time
+
+import numpy as np
+
+from repro.core import gbdt, pipeline
+from repro.data.azure_synth import generate_traces
+
+CACHE = pathlib.Path("experiments/cache")
+BENCH_OUT = pathlib.Path("experiments/bench")
+
+# paper §IV.A scale: 300K windows. 200 functions x 14 days ~= 390K windows
+N_FUNCTIONS = 200
+N_DAYS = 14
+SEED = 0
+
+
+def get_traces():
+    return generate_traces(n_functions=N_FUNCTIONS, n_days=N_DAYS,
+                           seed=SEED)
+
+
+def get_trained(verbose: bool = False) -> pipeline.TrainedAAPA:
+    CACHE.mkdir(parents=True, exist_ok=True)
+    pkl = CACHE / f"aapa_{N_FUNCTIONS}x{N_DAYS}_s{SEED}.pkl"
+    if pkl.exists():
+        with open(pkl, "rb") as f:
+            return pickle.load(f)
+    t0 = time.time()
+    trained = pipeline.train_aapa(get_traces(),
+                                  gbdt.GBDTConfig(n_rounds=60),
+                                  verbose=verbose)
+    print(f"# trained AAPA in {time.time()-t0:.0f}s "
+          f"(test_acc={trained.test_acc:.4f})")
+    with open(pkl, "wb") as f:
+        pickle.dump(trained, f)
+    return trained
+
+
+def emit(name: str, us_per_call: float, derived: str, payload=None):
+    """CSV line per the harness contract + JSON sidecar."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    if payload is not None:
+        BENCH_OUT.mkdir(parents=True, exist_ok=True)
+        with open(BENCH_OUT / f"{name}.json", "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+
+
+def timeit(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters * 1e6  # us

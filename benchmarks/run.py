@@ -1,0 +1,43 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_autoscaling, bench_classification,
+                            bench_labeling, bench_latency,
+                            bench_pipeline_perf, bench_rei, bench_roofline,
+                            bench_uncertainty)
+    benches = [
+        ("labeling", bench_labeling),
+        ("classification", bench_classification),
+        ("latency", bench_latency),
+        ("autoscaling", bench_autoscaling),
+        ("rei", bench_rei),
+        ("uncertainty", bench_uncertainty),
+        ("pipeline_perf", bench_pipeline_perf),
+        ("roofline", bench_roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in benches:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+        print(f"# [{name}] {time.time()-t0:.0f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

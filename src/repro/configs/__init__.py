@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, cells, get_config,
+                                    smoke_config)  # noqa: F401

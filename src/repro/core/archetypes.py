@@ -1,0 +1,55 @@
+"""Workload archetypes and the paper's Table III scaling parameters.
+
+Class ids follow the paper's Table IV ordering:
+    0 = PERIODIC, 1 = SPIKE, 2 = STATIONARY_NOISY, 3 = RAMP
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax.numpy as jnp
+
+N_CLASSES = 4
+
+
+class Archetype(enum.IntEnum):
+    PERIODIC = 0
+    SPIKE = 1
+    STATIONARY_NOISY = 2
+    RAMP = 3
+
+
+ARCHETYPE_NAMES = ["PERIODIC", "SPIKE", "STATIONARY_NOISY", "RAMP"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingParams:
+    """One column of the paper's Table III."""
+
+    target_cpu: float        # utilization target in [0, 1]
+    cooldown_min: float      # scale-down cooldown, minutes
+    min_replicas: int
+    strategy: str            # 'warm_pool' | 'predictive' | 'trend' | 'conservative'
+    warm_pool: int = 0       # extra always-on pods beyond demand (spike only)
+
+
+# Paper Table III, indexed by Archetype value.
+TABLE_III: dict[Archetype, ScalingParams] = {
+    Archetype.PERIODIC: ScalingParams(0.75, 3.0, 1, "predictive"),
+    Archetype.SPIKE: ScalingParams(0.30, 20.0, 2, "warm_pool", warm_pool=2),
+    Archetype.STATIONARY_NOISY: ScalingParams(0.55, 12.0, 1, "conservative"),
+    Archetype.RAMP: ScalingParams(0.60, 7.0, 1, "trend"),
+}
+
+
+def table_iii_arrays():
+    """Table III as jnp arrays indexed by class id (for use inside jit)."""
+    order = [Archetype.PERIODIC, Archetype.SPIKE,
+             Archetype.STATIONARY_NOISY, Archetype.RAMP]
+    tgt = jnp.array([TABLE_III[a].target_cpu for a in order], jnp.float32)
+    cool = jnp.array([TABLE_III[a].cooldown_min for a in order], jnp.float32)
+    minr = jnp.array([TABLE_III[a].min_replicas for a in order], jnp.float32)
+    warm = jnp.array([TABLE_III[a].warm_pool for a in order], jnp.float32)
+    return {"target_cpu": tgt, "cooldown_min": cool,
+            "min_replicas": minr, "warm_pool": warm}

@@ -1,0 +1,118 @@
+"""Beta calibration (Kull, Silva Filho & Flach, AISTATS 2017) in JAX.
+
+Paper §III.C.3: "We calibrate prediction probabilities using beta
+calibration to obtain reliable confidence scores c in [0, 1]."
+
+The beta calibration map is q = sigmoid(a·ln p − b·ln(1−p) + c) with
+a, b >= 0. We fit one-vs-rest maps per class on a held-out validation set
+by maximizing Bernoulli log-likelihood with full-batch Adam, then
+renormalize across classes at prediction time. Confidence = max_k q_k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-6
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BetaCalibration:
+    """Per-class beta-calibration parameters. a,b stored as softplus pre-images."""
+
+    a_raw: jax.Array  # [K]
+    b_raw: jax.Array  # [K]
+    c: jax.Array      # [K]
+
+    def tree_flatten(self):
+        return ((self.a_raw, self.b_raw, self.c), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _beta_map(a_raw, b_raw, c, p):
+    a = jax.nn.softplus(a_raw)
+    b = jax.nn.softplus(b_raw)
+    p = jnp.clip(p, EPS, 1.0 - EPS)
+    return jax.nn.sigmoid(a * jnp.log(p) - b * jnp.log1p(-p) + c)
+
+
+def _nll(params, p, y_bin):
+    a_raw, b_raw, c = params
+    q = _beta_map(a_raw, b_raw, c, p)
+    q = jnp.clip(q, EPS, 1.0 - EPS)
+    return -jnp.mean(y_bin * jnp.log(q) + (1.0 - y_bin) * jnp.log1p(-q))
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _fit_class(p, y_bin, steps: int = 400, lr: float = 0.1):
+    """Full-batch Adam on (a_raw, b_raw, c) for one class."""
+    params = (jnp.array(0.55), jnp.array(0.55), jnp.array(0.0))  # a=b~1, c=0
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, i):
+        params, m, v = carry
+        g = jax.grad(_nll)(params, p, y_bin)
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        t = i + 1.0
+        params = jax.tree.map(
+            lambda pp, mm, vv: pp - lr * (mm / (1 - b1**t))
+            / (jnp.sqrt(vv / (1 - b2**t)) + eps), params, m, v)
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(
+        step, (params, m, v), jnp.arange(steps, dtype=jnp.float32))
+    return params
+
+
+def fit(probs: np.ndarray, labels: np.ndarray) -> BetaCalibration:
+    """Fit one-vs-rest beta calibration. probs [N, K], labels [N] int."""
+    probs = jnp.asarray(probs, jnp.float32)
+    labels = np.asarray(labels)
+    K = probs.shape[1]
+    a_raw, b_raw, c = [], [], []
+    for k in range(K):
+        y_bin = jnp.asarray((labels == k).astype(np.float32))
+        ar, br, ck = _fit_class(probs[:, k], y_bin)
+        a_raw.append(ar), b_raw.append(br), c.append(ck)
+    return BetaCalibration(jnp.stack(a_raw), jnp.stack(b_raw), jnp.stack(c))
+
+
+@jax.jit
+def calibrate(cal: BetaCalibration, probs: jax.Array) -> jax.Array:
+    """probs [..., K] -> calibrated + renormalized probs [..., K]."""
+    q = _beta_map(cal.a_raw, cal.b_raw, cal.c, probs)
+    return q / (jnp.sum(q, axis=-1, keepdims=True) + EPS)
+
+
+def confidence(cal: BetaCalibration, probs: jax.Array) -> jax.Array:
+    """Calibrated confidence c in [0,1] = max_k calibrated prob."""
+    return jnp.max(calibrate(cal, probs), axis=-1)
+
+
+def expected_calibration_error(probs: np.ndarray, labels: np.ndarray,
+                               n_bins: int = 15) -> float:
+    """Standard ECE on max-prob confidence."""
+    probs = np.asarray(probs)
+    labels = np.asarray(labels)
+    conf = probs.max(axis=1)
+    pred = probs.argmax(axis=1)
+    correct = (pred == labels).astype(np.float64)
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    ece = 0.0
+    for i in range(n_bins):
+        m = (conf > edges[i]) & (conf <= edges[i + 1])
+        if m.sum() == 0:
+            continue
+        ece += m.mean() * abs(correct[m].mean() - conf[m].mean())
+    return float(ece)

@@ -1,0 +1,168 @@
+"""Sliding-window feature extraction (38 features, paper §III.B.1).
+
+Features are split into two groups:
+
+* ``stat_time_features`` — 28 statistical + time-domain features. This is
+  the compute hot-spot over 300K windows; a Pallas TPU kernel implements the
+  same math (``repro.kernels.window_features``); this module is the oracle.
+* ``freq_features`` — 10 frequency-domain features via ``jnp.fft`` (kept in
+  XLA; TPU Pallas has no FFT primitive — see DESIGN.md).
+
+All functions take ``windows`` of shape [..., W] (per-minute invocation
+counts, W = 60 by default) and are jit/vmap friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+STAT_TIME_NAMES = [
+    "mean", "std", "cv", "min", "max", "median", "q25", "q75", "iqr",
+    "skewness", "kurtosis", "max_to_median", "max_to_mean", "zero_fraction",
+    "range",
+    "trend_slope", "trend_r2", "half_ratio",
+    "acf_1", "acf_2", "acf_3", "acf_6", "acf_12",
+    "acf_max", "acf_argmax", "mean_abs_diff", "max_abs_diff", "n_peaks",
+]
+FREQ_NAMES = [
+    "spectral_entropy", "dominant_freq", "dominant_power_ratio",
+    "top2_power_ratio", "low_band_power", "mid_band_power",
+    "high_band_power", "spectral_centroid", "spectral_flatness",
+    "spectral_rolloff",
+]
+FEATURE_NAMES = STAT_TIME_NAMES + FREQ_NAMES
+N_FEATURES = len(FEATURE_NAMES)  # 38
+
+ACF_MAX_LAG_LO, ACF_MAX_LAG_HI = 2, 30  # lag range searched for acf_max
+
+
+def _acf(x, mean, var, lag):
+    """Autocorrelation at a given lag (biased normalization by n)."""
+    n = x.shape[-1]
+    xc = x - mean[..., None]
+    prod = xc[..., : n - lag] * xc[..., lag:]
+    return jnp.sum(prod, axis=-1) / (n * var + EPS)
+
+
+def stat_time_features(windows: jax.Array) -> jax.Array:
+    """28 statistical + time-domain features. windows: [..., W] -> [..., 28]."""
+    x = windows.astype(jnp.float32)
+    n = x.shape[-1]
+    t = jnp.arange(n, dtype=jnp.float32)
+
+    mean = jnp.mean(x, axis=-1)
+    var = jnp.mean((x - mean[..., None]) ** 2, axis=-1)
+    std = jnp.sqrt(var)
+    cv = std / (mean + EPS)
+    xmin = jnp.min(x, axis=-1)
+    xmax = jnp.max(x, axis=-1)
+
+    xs = jnp.sort(x, axis=-1)
+
+    def _quantile(q):
+        # linear-interpolated quantile on the sorted window
+        pos = q * (n - 1)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, n - 1)
+        w = pos - lo
+        return xs[..., lo] * (1.0 - w) + xs[..., hi] * w
+
+    median = _quantile(0.5)
+    q25 = _quantile(0.25)
+    q75 = _quantile(0.75)
+    iqr = q75 - q25
+
+    xc = x - mean[..., None]
+    m2 = var
+    m3 = jnp.mean(xc**3, axis=-1)
+    m4 = jnp.mean(xc**4, axis=-1)
+    skew = m3 / (m2**1.5 + EPS)
+    kurt = m4 / (m2**2 + EPS) - 3.0  # Fisher (excess) kurtosis
+
+    max_to_median = xmax / (median + EPS)
+    max_to_mean = xmax / (mean + EPS)
+    zero_frac = jnp.mean((x <= EPS).astype(jnp.float32), axis=-1)
+    rng = xmax - xmin
+
+    # OLS trend vs t, slope normalized by the window mean
+    tbar = (n - 1) / 2.0
+    tvar = jnp.mean((t - tbar) ** 2)
+    cov_tx = jnp.mean((t - tbar) * xc, axis=-1)
+    slope = cov_tx / tvar
+    slope_norm = slope / (mean + EPS)
+    r2 = (cov_tx**2) / (tvar * var + EPS)
+    half = n // 2
+    half_ratio = (jnp.mean(x[..., half:], axis=-1) + EPS) / (
+        jnp.mean(x[..., :half], axis=-1) + EPS)
+
+    acf1 = _acf(x, mean, var, 1)
+    acf2 = _acf(x, mean, var, 2)
+    acf3 = _acf(x, mean, var, 3)
+    acf6 = _acf(x, mean, var, 6)
+    acf12 = _acf(x, mean, var, 12)
+    lags = list(range(ACF_MAX_LAG_LO, ACF_MAX_LAG_HI + 1))
+    acfs = jnp.stack([_acf(x, mean, var, k) for k in lags], axis=-1)
+    acf_max = jnp.max(acfs, axis=-1)
+    acf_argmax = (jnp.argmax(acfs, axis=-1) + ACF_MAX_LAG_LO).astype(
+        jnp.float32) / ACF_MAX_LAG_HI
+
+    dx = x[..., 1:] - x[..., :-1]
+    mean_abs_diff = jnp.mean(jnp.abs(dx), axis=-1) / (mean + EPS)
+    max_abs_diff = jnp.max(jnp.abs(dx), axis=-1) / (mean + EPS)
+
+    thresh = (mean + std)[..., None]
+    mid, left, right = x[..., 1:-1], x[..., :-2], x[..., 2:]
+    peaks = (mid > left) & (mid >= right) & (mid > thresh)
+    n_peaks = jnp.sum(peaks.astype(jnp.float32), axis=-1) / n
+
+    feats = jnp.stack(
+        [mean, std, cv, xmin, xmax, median, q25, q75, iqr, skew, kurt,
+         max_to_median, max_to_mean, zero_frac, rng,
+         slope_norm, r2, half_ratio,
+         acf1, acf2, acf3, acf6, acf12, acf_max, acf_argmax,
+         mean_abs_diff, max_abs_diff, n_peaks], axis=-1)
+    return feats
+
+
+def freq_features(windows: jax.Array) -> jax.Array:
+    """10 frequency-domain features via rFFT. windows: [..., W] -> [..., 10]."""
+    x = windows.astype(jnp.float32)
+    n = x.shape[-1]
+    xc = x - jnp.mean(x, axis=-1, keepdims=True)
+    spec = jnp.abs(jnp.fft.rfft(xc, axis=-1)) ** 2  # [..., n//2 + 1]
+    power = spec[..., 1:]  # drop DC
+    nb = power.shape[-1]
+    total = jnp.sum(power, axis=-1) + EPS
+    p = power / total[..., None]
+
+    entropy = -jnp.sum(p * jnp.log(p + EPS), axis=-1) / jnp.log(float(nb))
+    dom_idx = jnp.argmax(power, axis=-1)
+    dom_freq = dom_idx.astype(jnp.float32) / nb
+    dom_ratio = jnp.max(power, axis=-1) / total
+    top2 = jnp.sum(jax.lax.top_k(power, 2)[0], axis=-1) / total
+
+    idx = jnp.arange(nb)
+    low = jnp.sum(jnp.where(idx < 5, power, 0.0), axis=-1) / total
+    mid = jnp.sum(jnp.where((idx >= 5) & (idx < 15), power, 0.0), axis=-1) / total
+    high = jnp.sum(jnp.where(idx >= 15, power, 0.0), axis=-1) / total
+
+    centroid = jnp.sum(p * idx.astype(jnp.float32), axis=-1) / nb
+    flatness = jnp.exp(jnp.mean(jnp.log(power + EPS), axis=-1)) / (
+        jnp.mean(power, axis=-1) + EPS)
+    cum = jnp.cumsum(p, axis=-1)
+    rolloff = jnp.argmax((cum >= 0.85).astype(jnp.int32), axis=-1).astype(
+        jnp.float32) / nb
+
+    return jnp.stack([entropy, dom_freq, dom_ratio, top2, low, mid, high,
+                      centroid, flatness, rolloff], axis=-1)
+
+
+def extract_features(windows: jax.Array) -> jax.Array:
+    """All 38 features. windows: [..., W] -> [..., 38]."""
+    return jnp.concatenate(
+        [stat_time_features(windows), freq_features(windows)], axis=-1)
+
+
+extract_features_jit = jax.jit(extract_features)

@@ -1,0 +1,102 @@
+"""Holt-Winters (triple exponential smoothing) in JAX.
+
+Used by the PERIODIC archetype strategy (paper Table III) and by the
+Generic Predictive baseline (paper §IV.C: uniform Holt-Winters with a
+15-minute prediction horizon).
+
+Two forms are provided:
+
+* ``hw_step`` — one online update, usable inside the cluster simulator's
+  lax.scan (state lives in the controller carry).
+* ``hw_smooth`` — full-series smoothing with one-step-ahead forecasts,
+  used for offline backtests. This sequential recurrence is also
+  implemented as a Pallas TPU kernel (``repro.kernels.holt_winters``);
+  this function is its oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class HWState(NamedTuple):
+    level: jax.Array    # []
+    trend: jax.Array    # []
+    season: jax.Array   # [period]
+    t: jax.Array        # [] int32, current phase
+
+
+def hw_init(period: int, y0: float | jax.Array = 0.0) -> HWState:
+    y0 = jnp.asarray(y0, jnp.float32)
+    return HWState(level=y0, trend=jnp.float32(0.0),
+                   season=jnp.zeros((period,), jnp.float32),
+                   t=jnp.int32(0))
+
+
+def hw_step(state: HWState, y: jax.Array, *, alpha=0.1, beta=0.01,
+            gamma=0.3) -> HWState:
+    """Additive-seasonal Holt-Winters online update with observation y."""
+    period = state.season.shape[0]
+    phase = state.t % period
+    s_t = state.season[phase]
+    level_new = alpha * (y - s_t) + (1.0 - alpha) * (state.level + state.trend)
+    trend_new = beta * (level_new - state.level) + (1.0 - beta) * state.trend
+    season_new = state.season.at[phase].set(
+        gamma * (y - level_new) + (1.0 - gamma) * s_t)
+    return HWState(level_new, trend_new, season_new, state.t + 1)
+
+
+def hw_forecast(state: HWState, horizon: int) -> jax.Array:
+    """h-step-ahead point forecast from the current state."""
+    period = state.season.shape[0]
+    phase = (state.t + horizon - 1) % period
+    return state.level + horizon * state.trend + state.season[phase]
+
+
+def hw_forecast_max(state: HWState, horizon: int) -> jax.Array:
+    """Max forecast over the next `horizon` steps (for peak pre-scaling)."""
+    hs = jnp.arange(1, horizon + 1)
+    period = state.season.shape[0]
+    phases = (state.t + hs - 1) % period
+    preds = state.level + hs.astype(jnp.float32) * state.trend \
+        + state.season[phases]
+    return jnp.max(preds)
+
+
+@partial(jax.jit, static_argnames=("period",))
+def hw_smooth(y: jax.Array, *, period: int = 60, alpha=0.1, beta=0.01,
+              gamma=0.3) -> jax.Array:
+    """One-step-ahead forecasts over a whole series.
+
+    y [..., T] -> forecasts [..., T] where forecasts[..., t] is the
+    prediction of y[..., t] made at time t-1. Vectorizes over leading axes.
+    """
+    def scan_one(series):
+        def body(state, yt):
+            pred = hw_forecast(state, 1)
+            return hw_step(state, yt, alpha=alpha, beta=beta, gamma=gamma), pred
+        init = hw_init(period, series[0])
+        _, preds = jax.lax.scan(body, init, series)
+        return preds
+
+    flat = y.reshape((-1, y.shape[-1]))
+    out = jax.vmap(scan_one)(flat.astype(jnp.float32))
+    return out.reshape(y.shape)
+
+
+def linear_trend_forecast(history: jax.Array, horizon: int) -> jax.Array:
+    """RAMP strategy: OLS trend extrapolation `horizon` steps ahead.
+
+    history [..., T] -> scalar forecast [...]. Clipped at zero.
+    """
+    x = history.astype(jnp.float32)
+    n = x.shape[-1]
+    t = jnp.arange(n, dtype=jnp.float32)
+    tbar = (n - 1) / 2.0
+    tvar = jnp.mean((t - tbar) ** 2)
+    mean = jnp.mean(x, axis=-1)
+    slope = jnp.mean((t - tbar) * (x - mean[..., None]), axis=-1) / tvar
+    return jnp.maximum(mean + slope * ((n - 1) - tbar + horizon), 0.0)

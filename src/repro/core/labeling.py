@@ -1,0 +1,134 @@
+"""Weak supervision: 10 programmatic labeling functions + majority vote.
+
+Paper §III.B.2: spike detection (kurtosis > 10, max-to-median ratio > 20),
+periodicity (spectral entropy < 0.5, autocorrelation > 0.6), ramp patterns
+(strong linear trends), stationary-noisy patterns. LF outputs are
+aggregated with majority voting; the agreement level is a natural
+confidence score.
+
+Each LF maps a feature row -> class id in {0..3} or ABSTAIN (-1).
+All LFs are pure jnp and vectorize over leading axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.archetypes import Archetype, N_CLASSES
+from repro.core.features import FEATURE_NAMES
+
+ABSTAIN = -1
+_F = {name: i for i, name in enumerate(FEATURE_NAMES)}
+
+
+def _col(feats, name):
+    return feats[..., _F[name]]
+
+
+def _lf(condition, label):
+    return jnp.where(condition, label, ABSTAIN)
+
+
+def lf_spike_kurtosis(f):
+    return _lf(_col(f, "kurtosis") > 10.0, Archetype.SPIKE)
+
+
+def lf_spike_max_median(f):
+    return _lf(_col(f, "max_to_median") > 20.0, Archetype.SPIKE)
+
+
+def lf_spike_zero_burst(f):
+    cond = (_col(f, "zero_fraction") > 0.5) & (_col(f, "max_to_mean") > 10.0)
+    return _lf(cond, Archetype.SPIKE)
+
+
+def lf_periodic_spectral(f):
+    # trend guard: a linear ramp concentrates low-frequency power too
+    cond = ((_col(f, "spectral_entropy") < 0.5)
+            & (_col(f, "dominant_power_ratio") > 0.3)
+            & (_col(f, "trend_r2") < 0.6))
+    return _lf(cond, Archetype.PERIODIC)
+
+
+def lf_periodic_autocorr(f):
+    # trend guard: trending series have acf ~ 1 at every lag
+    cond = ((_col(f, "acf_max") > 0.6) & (_col(f, "max_to_median") < 20.0)
+            & (_col(f, "trend_r2") < 0.5))
+    return _lf(cond, Archetype.PERIODIC)
+
+
+def lf_periodic_peaks(f):
+    cond = ((_col(f, "n_peaks") >= 2.0 / 60.0)
+            & (_col(f, "acf_max") > 0.5)
+            & (_col(f, "kurtosis") < 10.0)
+            & (_col(f, "trend_r2") < 0.5))
+    return _lf(cond, Archetype.PERIODIC)
+
+
+def lf_ramp_trend(f):
+    cond = (_col(f, "trend_r2") > 0.75) & (
+        jnp.abs(_col(f, "trend_slope")) > 0.02)
+    return _lf(cond, Archetype.RAMP)
+
+
+def lf_ramp_halves(f):
+    hr = _col(f, "half_ratio")
+    cond = ((hr > 1.6) | (hr < 0.6)) & (_col(f, "trend_r2") > 0.5)
+    return _lf(cond, Archetype.RAMP)
+
+
+def lf_stationary_low_var(f):
+    cond = ((_col(f, "cv") < 0.35)
+            & (jnp.abs(_col(f, "trend_slope")) < 0.01)
+            & (_col(f, "acf_max") < 0.6))
+    return _lf(cond, Archetype.STATIONARY_NOISY)
+
+
+def lf_stationary_no_structure(f):
+    cond = ((_col(f, "spectral_entropy") > 0.85)
+            & (_col(f, "kurtosis") < 3.0)
+            & (_col(f, "max_to_median") < 5.0)
+            & (_col(f, "trend_r2") < 0.5))
+    return _lf(cond, Archetype.STATIONARY_NOISY)
+
+
+LABELING_FUNCTIONS = [
+    lf_spike_kurtosis, lf_spike_max_median, lf_spike_zero_burst,
+    lf_periodic_spectral, lf_periodic_autocorr, lf_periodic_peaks,
+    lf_ramp_trend, lf_ramp_halves,
+    lf_stationary_low_var, lf_stationary_no_structure,
+]
+N_LFS = len(LABELING_FUNCTIONS)  # 10
+
+
+def apply_lfs(features: jax.Array) -> jax.Array:
+    """Run all LFs. features [..., 38] -> votes [..., N_LFS] in {-1, 0..3}."""
+    votes = [lf(features).astype(jnp.int32) for lf in LABELING_FUNCTIONS]
+    return jnp.stack(votes, axis=-1)
+
+
+def majority_vote(votes: jax.Array):
+    """Aggregate LF votes (paper: majority voting, agreement = confidence).
+
+    Returns (labels [...], confidence [...], n_votes [...]).
+    labels = -1 where every LF abstained. Ties break toward the
+    rarer/riskier class (SPIKE > RAMP > PERIODIC > STATIONARY) by adding a
+    tiny class-priority epsilon before the argmax.
+    """
+    counts = jnp.stack(
+        [jnp.sum((votes == k).astype(jnp.int32), axis=-1)
+         for k in range(N_CLASSES)], axis=-1).astype(jnp.float32)
+    n_votes = jnp.sum(counts, axis=-1)
+    # tie-break priority: SPIKE(1) > RAMP(3) > PERIODIC(0) > STATIONARY(2)
+    prio = jnp.array([0.2, 0.3, 0.0, 0.25], jnp.float32) * 1e-3
+    labels = jnp.argmax(counts + prio, axis=-1).astype(jnp.int32)
+    labels = jnp.where(n_votes > 0, labels, ABSTAIN)
+    confidence = jnp.max(counts, axis=-1) / jnp.maximum(n_votes, 1.0)
+    confidence = jnp.where(n_votes > 0, confidence, 0.0)
+    return labels, confidence, n_votes
+
+
+@jax.jit
+def weak_label(features: jax.Array):
+    """features [..., 38] -> (labels, confidence, n_votes)."""
+    return majority_vote(apply_lfs(features))

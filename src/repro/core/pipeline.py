@@ -1,0 +1,102 @@
+"""End-to-end AAPA pipeline: traces -> windows -> features -> weak labels
+-> GBDT -> beta calibration -> deployable classifier closure.
+
+This is the glue the paper's Figure 1 describes: the feature-extraction
+pipeline feeds the weak-supervision labeler, the classifier trains on the
+weak labels (days 1-9), calibrates on validation days (10-11), and the
+resulting `classify` closure plugs into ``aapa_controller``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration, gbdt
+from repro.core import features as F
+from repro.core import labeling
+from repro.data import windows as W
+from repro.data.azure_synth import TraceSet
+
+
+@dataclasses.dataclass
+class TrainedAAPA:
+    params: gbdt.GBDTParams
+    cal: calibration.BetaCalibration
+    train_acc: float
+    val_acc: float
+    test_acc: float
+    label_dist: np.ndarray     # weak-label distribution over 4 classes
+    n_windows: int
+    fit_seconds: float
+
+    def make_classify(self) -> Callable:
+        """Returns classify(features [38]) -> (class int32, confidence)."""
+        params, cal = self.params, self.cal
+
+        def classify(feats: jax.Array):
+            logits = gbdt.predict_logits(params, feats[None, :])
+            probs = jax.nn.softmax(logits, axis=-1)
+            calp = calibration.calibrate(cal, probs)[0]
+            return (jnp.argmax(calp).astype(jnp.int32),
+                    jnp.max(calp).astype(jnp.float32))
+
+        return classify
+
+
+def featurize_and_label(ds: W.WindowDataset, batch: int = 65536):
+    """Extract 38 features + weak labels for every window (batched)."""
+    feats, labels, confs = [], [], []
+    for i in range(0, len(ds), batch):
+        wb = jnp.asarray(ds.windows[i:i + batch])
+        fb = F.extract_features_jit(wb)
+        lb, cb, _ = labeling.weak_label(fb)
+        feats.append(np.asarray(fb))
+        labels.append(np.asarray(lb))
+        confs.append(np.asarray(cb))
+    return (np.concatenate(feats), np.concatenate(labels),
+            np.concatenate(confs))
+
+
+def train_aapa(traces: TraceSet, cfg: gbdt.GBDTConfig = gbdt.GBDTConfig(),
+               *, verbose: bool = False) -> TrainedAAPA:
+    ds = W.make_windows(traces)
+    if traces.n_days >= 14:   # paper split: 1-9 / 10-11 / 12-14
+        split = W.day_split(ds)
+    else:                     # proportional split for smaller runs
+        n = traces.n_days
+        t_end = max(int(n * 9 / 14), 1)
+        v_end = max(int(n * 11 / 14), t_end + 1)
+        split = W.day_split(ds, train_days=(1, t_end),
+                            val_days=(t_end + 1, v_end),
+                            test_days=(v_end + 1, n))
+    X, y, _ = featurize_and_label(ds)
+
+    labeled = y >= 0  # drop windows where every LF abstained
+    masks = {k: m & labeled for k, m in split.items()}
+
+    t0 = time.time()
+    params = gbdt.fit(X[masks["train"]], y[masks["train"]], cfg,
+                      verbose=verbose)
+    fit_s = time.time() - t0
+
+    def acc(m):
+        if m.sum() == 0:
+            return float("nan")
+        pred = np.asarray(gbdt.predict(params, jnp.asarray(X[m])))
+        return float((pred == y[m]).mean())
+
+    probs_val = np.asarray(gbdt.predict_proba(params,
+                                              jnp.asarray(X[masks["val"]])))
+    cal = calibration.fit(probs_val, y[masks["val"]])
+
+    dist = np.bincount(y[labeled], minlength=4) / max(labeled.sum(), 1)
+    return TrainedAAPA(params=params, cal=cal,
+                       train_acc=acc(masks["train"]),
+                       val_acc=acc(masks["val"]), test_acc=acc(masks["test"]),
+                       label_dist=dist, n_windows=int(labeled.sum()),
+                       fit_seconds=fit_s)

@@ -1,0 +1,59 @@
+"""Resource Efficiency Index (paper §III.D).
+
+    REI = alpha * S_SLO + beta * S_eff + gamma * S_stab
+
+S_SLO  = 1 - violation_rate
+S_eff  = 1 / normalized_pod_minutes
+S_stab = 1 / scaling_actions   (both normalized so scores live in (0, 1])
+
+Default weights alpha=0.5, beta=0.3, gamma=0.2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_WEIGHTS = (0.5, 0.3, 0.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class REIBreakdown:
+    s_slo: float
+    s_eff: float
+    s_stab: float
+    rei: float
+
+
+def rei(violation_rate: float, pod_minutes: float, scaling_actions: float,
+        *, baseline_pod_minutes: float = 1440.0,
+        baseline_actions: float = 10.0,
+        weights: tuple[float, float, float] = DEFAULT_WEIGHTS) -> REIBreakdown:
+    """Compute REI.
+
+    pod_minutes is normalized by `baseline_pod_minutes` (default: one pod
+    for a whole day); scaling_actions by `baseline_actions`. Both
+    efficiency/stability scores are capped at 1 so REI is in [0, 1].
+    """
+    a, b, g = weights
+    s_slo = float(np.clip(1.0 - violation_rate, 0.0, 1.0))
+    norm_pm = max(pod_minutes / baseline_pod_minutes, 1e-9)
+    s_eff = float(np.clip(1.0 / norm_pm, 0.0, 1.0))
+    norm_act = max(scaling_actions / baseline_actions, 1e-9)
+    s_stab = float(np.clip(1.0 / norm_act, 0.0, 1.0))
+    return REIBreakdown(s_slo, s_eff, s_stab,
+                        a * s_slo + b * s_eff + g * s_stab)
+
+
+def sensitivity(violation_rate, pod_minutes, scaling_actions,
+                delta: float = 0.05, **kw) -> list[REIBreakdown]:
+    """REI under weight perturbations of +/- delta (paper §V.D)."""
+    a, b, g = DEFAULT_WEIGHTS
+    out = []
+    for da, db, dg in [(+delta, -delta, 0), (-delta, +delta, 0),
+                       (0, +delta, -delta), (0, -delta, +delta),
+                       (+delta, 0, -delta), (-delta, 0, +delta)]:
+        w = (a + da, b + db, g + dg)
+        out.append(rei(violation_rate, pod_minutes, scaling_actions,
+                       weights=w, **kw))
+    return out

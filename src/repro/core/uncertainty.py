@@ -1,0 +1,36 @@
+"""Algorithm 1: uncertainty-aware scaling adjustment (paper §III.C.3).
+
+Given confidence c in [0,1] and base parameters:
+    m        = 1 + 0.5 (1 - c)          # margin multiplier
+    cpu_adj  = cpu_target (1 - 0.2 (1 - c))
+    cool_adj = cool_base * m
+    rep_adj  = ceil(rep_base * m)
+
+Lower confidence => more conservative: lower CPU target (more headroom),
+longer cooldown, more minimum replicas.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class AdjustedParams(NamedTuple):
+    target_cpu: jnp.ndarray
+    cooldown_min: jnp.ndarray
+    min_replicas: jnp.ndarray
+
+
+def margin_multiplier(confidence):
+    return 1.0 + 0.5 * (1.0 - confidence)
+
+
+def adjust(confidence, target_cpu, cooldown_min, min_replicas) -> AdjustedParams:
+    """Vectorized Algorithm 1. All args broadcastable jnp arrays."""
+    c = jnp.clip(confidence, 0.0, 1.0)
+    m = margin_multiplier(c)
+    cpu_adj = target_cpu * (1.0 - 0.2 * (1.0 - c))
+    cool_adj = cooldown_min * m
+    rep_adj = jnp.ceil(min_replicas * m)
+    return AdjustedParams(cpu_adj, cool_adj, rep_adj)

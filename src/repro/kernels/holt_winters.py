@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: batched Holt-Winters triple exponential smoothing.
+
+The Generic-Predictive baseline and AAPA's PERIODIC strategy backtest
+Holt-Winters over every workload series (paper §IV.C). The recurrence is
+sequential in time, so the TPU mapping is: one grid step per tile of
+``TILE_B`` series held in VMEM sublanes, the time loop inside the kernel
+(``lax.fori_loop``), and the seasonal state kept as a ``(TILE_B, period)``
+VMEM tile updated with one-hot lane masks (the TPU analogue of the GPU
+"one thread per series" layout — here one *sublane* per series, lanes
+carry the seasonal vector).
+
+Oracle: ``repro.core.forecasting.hw_smooth`` (see ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, o_ref, *, period: int, alpha: float, beta: float,
+            gamma: float):
+    """y_ref: (TILE_B, T) f32; o_ref: (TILE_B, T) one-step-ahead preds."""
+    tile_b, T = y_ref.shape
+    season0 = jnp.zeros((tile_b, period), jnp.float32)
+    lane_p = jax.lax.broadcasted_iota(jnp.int32, (tile_b, period), 1)
+
+    level0 = y_ref[:, 0][:, None]                 # init: level = y[0]
+    trend0 = jnp.zeros((tile_b, 1), jnp.float32)
+
+    def body(t, carry):
+        level, trend, season = carry
+        phase = jax.lax.rem(t, period)
+        onehot = (lane_p == phase)
+        s_t = jnp.sum(jnp.where(onehot, season, 0.0), axis=1, keepdims=True)
+
+        pred = level + trend + s_t                # 1-step-ahead forecast
+        o_ref[:, pl.dslice(t, 1)] = pred
+
+        yt = y_ref[:, pl.dslice(t, 1)]
+        level_new = alpha * (yt - s_t) + (1.0 - alpha) * (level + trend)
+        trend_new = beta * (level_new - level) + (1.0 - beta) * trend
+        s_new = gamma * (yt - level_new) + (1.0 - gamma) * s_t
+        season = jnp.where(onehot, s_new, season)
+        return level_new, trend_new, season
+
+    jax.lax.fori_loop(0, T, body, (level0, trend0, season0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("period", "alpha", "beta", "gamma",
+                                    "tile_b", "interpret"))
+def holt_winters_kernel(y: jax.Array, *, period: int = 60,
+                        alpha: float = 0.1, beta: float = 0.01,
+                        gamma: float = 0.3, tile_b: int = 8,
+                        interpret: bool = True) -> jax.Array:
+    """y [B, T] -> one-step-ahead forecasts [B, T] (f32).
+
+    Matches ``hw_smooth`` semantics: prediction at t is made from state
+    after observing y[:t]; the t=0 prediction is the y[0]-initialized level.
+    """
+    B, T = y.shape
+    n_tiles = max((B + tile_b - 1) // tile_b, 1)
+    pad_b = n_tiles * tile_b
+    x = jnp.zeros((pad_b, T), jnp.float32)
+    x = x.at[:B].set(y.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, period=period, alpha=alpha, beta=beta,
+                          gamma=gamma),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_b, T), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_b, T), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pad_b, T), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:B]

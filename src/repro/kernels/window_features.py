@@ -1,0 +1,185 @@
+"""Pallas TPU kernel: fused 28-feature extraction for sliding windows.
+
+AAPA's labeling/classification pipeline computes 28 statistical +
+time-domain features per 60-minute window over ~300K windows (paper
+§III.B). The pure-jnp path materializes a sorted copy, 29 shifted
+autocorrelation products, and several moment intermediates per window in
+HBM; this kernel fuses everything into one VMEM-resident pass per tile of
+windows.
+
+TPU mapping (see DESIGN.md §2 hardware-adaptation notes):
+* grid over tiles of ``TILE_N`` windows; each block is a
+  ``(TILE_N, PAD)`` f32 VMEM tile (PAD = window length padded to the
+  64-lane boundary; windows are 60 samples, so one tile row = one window
+  in lanes with a 4-lane sentinel pad).
+* Order statistics (median / q25 / q75) need a sort, which the VPU lacks;
+  instead we compute exact ranks with ``PAD-1`` static lane *rotations*
+  and compare-accumulate — rank_i = #{j : x_j < x_i or (x_j == x_i and
+  j < i)} — then select the k-th order statistic by masked sum. This keeps
+  every intermediate rank-2 (sublane x lane), which Mosaic tiles natively;
+  no rank-3 temporaries, no gather.
+* Autocorrelations, diffs and peak counts reuse the same static-rotation
+  trick with validity masks.
+
+Everything here is also what ``ref.py``'s oracle
+(``repro.core.features.stat_time_features``) computes; tests sweep shapes
+and dtypes in interpret mode and assert allclose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+N_FEATS = 28
+OUT_LANES = 32          # features padded to a lane-friendly width
+ACF_LAGS = (1, 2, 3, 6, 12)
+ACF_MAX_LO, ACF_MAX_HI = 2, 30
+SENTINEL = 1e30
+
+
+def _rotate(x, s):
+    """Static rotate along the lane axis: out[:, i] = x[:, (i - s) % L]."""
+    return jnp.roll(x, s, axis=1)
+
+
+def _masked_acf(x, xc, mean, var, lag, w, lane):
+    """Autocorrelation at `lag` over the valid prefix of length w."""
+    shifted = _rotate(xc, -lag)                  # lane i holds xc[i + lag]
+    valid = (lane < (w - lag)).astype(x.dtype)
+    prod = jnp.sum(xc * shifted * valid, axis=1, keepdims=True)
+    return prod / (w * var + EPS)
+
+
+def _order_stat(x_sent, ranks, k, w):
+    """k-th order statistic (0-based) via rank-match masked sum."""
+    hit = (ranks == k).astype(x_sent.dtype)
+    return jnp.sum(jnp.where(x_sent >= SENTINEL * 0.5, 0.0, x_sent) * hit,
+                   axis=1, keepdims=True)
+
+
+def _quantile(x_sent, ranks, q, w):
+    pos = q * (w - 1)
+    lo = int(pos)
+    hi = min(lo + 1, w - 1)
+    frac = pos - lo
+    vlo = _order_stat(x_sent, ranks, lo, w)
+    vhi = _order_stat(x_sent, ranks, hi, w)
+    return vlo * (1.0 - frac) + vhi * frac
+
+
+def _kernel(x_ref, o_ref, *, w: int):
+    """x_ref: (TILE_N, PAD) f32, first `w` lanes valid; o_ref (TILE_N, 32)."""
+    xr = x_ref[...]
+    pad = xr.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, xr.shape, 1)
+    valid = (lane < w)
+    vf = valid.astype(xr.dtype)
+    x = jnp.where(valid, xr, 0.0)
+
+    n = float(w)
+    mean = jnp.sum(x, axis=1, keepdims=True) / n
+    xc = jnp.where(valid, x - mean, 0.0)
+    var = jnp.sum(xc * xc, axis=1, keepdims=True) / n
+    std = jnp.sqrt(var)
+    cv = std / (mean + EPS)
+    big = jnp.where(valid, x, -SENTINEL)
+    xmax = jnp.max(big, axis=1, keepdims=True)
+    xmin = jnp.min(jnp.where(valid, x, SENTINEL), axis=1, keepdims=True)
+
+    # ---- exact ranks via static rotations (tie-break by lane index) ----
+    x_sent = jnp.where(valid, x, SENTINEL)
+    ranks = jnp.zeros_like(lane)
+    for s in range(1, pad):
+        xj = _rotate(x_sent, s)                 # lane i: x[(i - s) % pad]
+        jlti = lane >= s                        # j = i - s (mod) < i
+        less = (xj < x_sent) | ((xj == x_sent) & jlti)
+        ranks = ranks + less.astype(jnp.int32)
+
+    median = _quantile(x_sent, ranks, 0.50, w)
+    q25 = _quantile(x_sent, ranks, 0.25, w)
+    q75 = _quantile(x_sent, ranks, 0.75, w)
+    iqr = q75 - q25
+
+    m3 = jnp.sum(xc**3, axis=1, keepdims=True) / n
+    m4 = jnp.sum(xc**4, axis=1, keepdims=True) / n
+    skew = m3 / (var**1.5 + EPS)
+    kurt = m4 / (var**2 + EPS) - 3.0
+    max_to_median = xmax / (median + EPS)
+    max_to_mean = xmax / (mean + EPS)
+    zero_frac = jnp.sum((jnp.abs(x) <= EPS) * vf, axis=1, keepdims=True) / n
+    rng_ = xmax - xmin
+
+    # ---- trend (OLS vs lane index over valid prefix) ----
+    t = lane.astype(xr.dtype)
+    tbar = (n - 1.0) / 2.0
+    tvar = (n * n - 1.0) / 12.0
+    cov_tx = jnp.sum(jnp.where(valid, (t - tbar) * xc, 0.0), axis=1,
+                     keepdims=True) / n
+    slope = cov_tx / tvar
+    slope_norm = slope / (mean + EPS)
+    r2 = cov_tx * cov_tx / (tvar * var + EPS)
+    half = w // 2
+    sum_lo = jnp.sum(jnp.where(lane < half, x, 0.0), axis=1, keepdims=True)
+    sum_hi = jnp.sum(jnp.where((lane >= half) & valid, x, 0.0), axis=1,
+                     keepdims=True)
+    half_ratio = (sum_hi / (n - half) + EPS) / (sum_lo / half + EPS)
+
+    # ---- autocorrelations ----
+    acf_named = [_masked_acf(x, xc, mean, var, k, w, lane)
+                 for k in ACF_LAGS]
+    acf_stack = [_masked_acf(x, xc, mean, var, k, w, lane)
+                 for k in range(ACF_MAX_LO, ACF_MAX_HI + 1)]
+    acf_all = jnp.concatenate(acf_stack, axis=1)       # (TILE_N, 29)
+    acf_max = jnp.max(acf_all, axis=1, keepdims=True)
+    acf_arg = (jnp.argmax(acf_all, axis=1, keepdims=True)
+               .astype(xr.dtype) + ACF_MAX_LO) / ACF_MAX_HI
+
+    # ---- diffs & peaks ----
+    xn = _rotate(x, -1)                                # lane i: x[i+1]
+    dvalid = (lane < (w - 1)).astype(xr.dtype)
+    ad = jnp.abs(xn - x) * dvalid
+    mean_ad = jnp.sum(ad, axis=1, keepdims=True) / (n - 1.0) / (mean + EPS)
+    max_ad = jnp.max(ad, axis=1, keepdims=True) / (mean + EPS)
+
+    xp = _rotate(x, 1)                                 # lane i: x[i-1]
+    mid_ok = (lane >= 1) & (lane < (w - 1))
+    thr = mean + std
+    peaks = ((x > xp) & (x >= xn) & (x > thr) & mid_ok)
+    n_peaks = jnp.sum(peaks.astype(xr.dtype), axis=1, keepdims=True) / n
+
+    feats = jnp.concatenate(
+        [mean, std, cv, xmin, xmax, median, q25, q75, iqr, skew, kurt,
+         max_to_median, max_to_mean, zero_frac, rng_,
+         slope_norm, r2, half_ratio,
+         *acf_named, acf_max, acf_arg, mean_ad, max_ad, n_peaks], axis=1)
+    o_ref[...] = jnp.pad(feats, ((0, 0), (0, OUT_LANES - N_FEATS)))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def window_features_kernel(windows: jax.Array, *, tile_n: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """windows [N, W] (any float dtype) -> features [N, 28] f32.
+
+    Pads N to a tile multiple and W to the 64-lane boundary; the pad region
+    is masked inside the kernel.
+    """
+    N, W = windows.shape
+    pad_w = max(64, ((W + 63) // 64) * 64)
+    n_tiles = max((N + tile_n - 1) // tile_n, 1)
+    pad_n = n_tiles * tile_n
+    x = jnp.zeros((pad_n, pad_w), jnp.float32)
+    x = x.at[:N, :W].set(windows.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, w=W),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_n, pad_w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_n, OUT_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pad_n, OUT_LANES), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:N, :N_FEATS]

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape)
+# cell on the production mesh, print memory/cost analyses, and dump
+# roofline inputs to JSON.
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun \
+#         --arch all --shape all --mesh both --out experiments/dryrun
+#
+# The XLA_FLAGS lines above MUST run before any other import (jax locks
+# the device count on first init) — which is why this module has no
+# `from __future__` header.
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.registry import SHAPES, cells, get_config
+from repro.dist import sharding as shd
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+
+# collective-op byte accounting (per-device module; see EXPERIMENTS.md).
+_COLL_RE = re.compile(
+    r"^\s*\S+ = \(?([a-z0-9]+\[[0-9,]*\])"
+    r".*?\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device collective bytes by op kind from compiled HLO.
+
+    Uses result shapes with op-specific traffic factors (ring algorithms):
+    all-reduce 2(g-1)/g * R, all-gather (g-1)/g * R, reduce-scatter
+    (g-1) * R (operand ~ g*R), all-to-all (g-1)/g * R, permute R.
+    """
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group(2)
+        # sum every result-tuple component on the line (variadic collectives)
+        lhs = line.split("=", 1)[1].split("(", 1)[0]
+        bytes_ = sum(_shape_bytes(t.group(0))
+                     for t in _SHAPE_RE.finditer(lhs))
+        g = 2.0
+        gm = _GROUP_RE.search(line)
+        if gm:
+            g = max(float(gm.group(2)), 2.0)
+        if op == "all-reduce":
+            traffic = 2.0 * bytes_ * (g - 1.0) / g
+        elif op == "all-gather":
+            traffic = bytes_ * (g - 1.0) / g
+        elif op == "reduce-scatter":
+            traffic = bytes_ * (g - 1.0)
+        elif op == "all-to-all":
+            traffic = bytes_ * (g - 1.0) / g
+        else:
+            traffic = bytes_
+        out[op] += traffic
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_dir: pathlib.Path | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.set_mesh(mesh)
+    try:
+        fn, args = sp.step_fn(cfg, shape, dp_size=rules.axis_size("dp"))
+        if shape.kind == "train":
+            params_s, opt_s, batch_s = args
+            in_sh = (shd.param_shardings(params_s),
+                     jax.tree.map(lambda _: None, opt_s),
+                     shd.batch_shardings(batch_s))
+            # opt state shards like the master params
+            in_sh = (in_sh[0],
+                     type(opt_s)(None, shd.param_shardings(opt_s.master),
+                                 shd.param_shardings(opt_s.m),
+                                 shd.param_shardings(opt_s.v)),
+                     in_sh[2])
+        elif shape.kind == "prefill":
+            params_s, batch_s = args
+            in_sh = (shd.param_shardings(params_s),
+                     shd.batch_shardings(batch_s))
+        else:
+            params_s, cache_s, tok_s = args
+            in_sh = (shd.param_shardings(params_s),
+                     shd.cache_shardings(cache_s, cfg),
+                     shd.batch_shardings({"tokens": tok_s})["tokens"])
+
+        # donation: train updates (params, opt) in place; decode updates the
+        # cache in place — halves the resident footprint of the updated state
+        donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        if hlo_dir is not None:
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+            (hlo_dir / f"{tag}.hlo.txt").write_text(hlo)
+
+        rec = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_devices": mesh.devices.size,
+            "kind": shape.kind,
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": float(cost.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(
+                cost.get("bytes accessed", -1.0)),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+            "collectives": coll,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+        }
+        print(f"[dryrun] {arch} {shape_name} "
+              f"{'multi' if multi_pod else 'single'}: OK "
+              f"compile={t_compile:.0f}s flops/dev={rec['flops_per_device']:.3e} "
+              f"coll={coll['total_bytes']:.3e}B")
+        print(f"  memory_analysis: {rec['memory']}")
+        return rec
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "ok": False, "error": f"{type(e).__name__}: {e}"}
+    finally:
+        shd.set_mesh(None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    hlo_dir = out_dir / "hlo" if args.save_hlo else None
+
+    todo = cells()
+    if args.arch != "all":
+        todo = [(a, s) for a, s in todo if a == args.arch]
+    if args.shape != "all":
+        todo = [(a, s) for a, s in todo if s == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results_path = out_dir / "results.json"
+    results = {}
+    if results_path.exists():
+        results = json.loads(results_path.read_text())
+
+    for arch, shape in todo:
+        for mp in meshes:
+            key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+            if results.get(key, {}).get("ok"):
+                print(f"[dryrun] skip cached {key}")
+                continue
+            results[key] = run_cell(arch, shape, mp, hlo_dir)
+            results_path.write_text(json.dumps(results, indent=1))
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK -> {results_path}")
+
+
+if __name__ == "__main__":
+    main()

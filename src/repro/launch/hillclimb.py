@@ -1,0 +1,59 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# §Perf hillclimb driver: probe the three selected cells with candidate
+# changes (baseline vs variant), writing before/after roofline terms to
+# experiments/hillclimb/results.json.
+#
+#   cell A (paper-representative serving decode): stablelm_1_6b decode_32k
+#           — variant: fp8 KV cache (memory term / 2 on the cache reads)
+#   cell B (sub-quadratic long-context): zamba2_2_7b long_500k
+#           — variant: fp8 shared-attn KV cache
+#   cell C (most collective-bound / MoE): qwen3_moe_30b_a3b train_4k
+#           — variant: capacity_factor 2.0 -> 1.0 (a2a bytes ~ -50%)
+
+import json
+import pathlib
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import probe_cell
+
+CELLS = [
+    ("stablelm_1_6b", "decode_32k", "fp8_kv_cache",
+     {"cache_dtype": "float8_e4m3fn"}),
+    ("zamba2_2_7b", "long_500k", "fp8_kv_cache",
+     {"cache_dtype": "float8_e4m3fn"}),
+    ("qwen3_moe_30b_a3b", "train_4k", "capacity_factor_1.0",
+     {"capacity_factor": 1.0}),
+]
+
+
+def main():
+    out = pathlib.Path("experiments/hillclimb")
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / "results.json"
+    results = json.loads(path.read_text()) if path.exists() else {}
+    mesh = make_production_mesh(multi_pod=False)
+
+    for arch, shape, vname, overrides in CELLS:
+        for tag, ov in (("baseline", None), (vname, overrides)):
+            key = f"{arch}|{shape}|{tag}"
+            if key in results and "error" not in results[key]:
+                print("[hillclimb] cached", key)
+                continue
+            try:
+                rec = probe_cell(arch, shape, mesh, cfg_overrides=ov)
+                print(f"[hillclimb] {key}: comp={rec['compute_s']:.3e} "
+                      f"mem={rec['memory_s']:.3e} "
+                      f"coll={rec['collective_s']:.3e} "
+                      f"dom={rec['dominant']}")
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                rec = {"error": str(e)}
+            results[key] = rec
+            path.write_text(json.dumps(results, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Roofline probes (single-pod mesh, per §Roofline):
+#
+#   compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+#   memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+#   collective term = collective_bytes / (chips x 50 GB/s ICI link)
+#
+# XLA's cost_analysis counts a while/scan body ONCE regardless of trip
+# count, so every production function is re-lowered here in "unroll" mode
+# (straight-line layers / flash tiles / SSD chunks / CE chunks) at two
+# layer counts; the per-layer delta + fixed cost extrapolate exactly to
+# the full depth. Collective bytes are parsed from the unrolled sharded
+# HLO the same way. The scanned production artifact (launch/dryrun.py)
+# separately proves compile + memory feasibility.
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs.registry import SHAPES, cells, get_config
+from repro.dist import sharding as shd
+from repro.launch import specs as sp
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import layers as Lyr
+
+PEAK_FLOPS = 197e12       # bf16 per chip (v5e)
+HBM_BW = 819e9            # per chip
+LINK_BW = 50e9            # per ICI link
+
+
+def _probe_cfg(cfg, n_scan, n_enc=None):
+    kw = {"n_layers": cfg.first_k_dense + n_scan}
+    if n_enc is not None:
+        kw["n_enc_layers"] = n_enc
+    return dataclasses.replace(cfg, **kw)
+
+
+def _lower_probe(cfg, shape, mesh):
+    """Lower+compile one unrolled probe; return (flops, bytes, coll)."""
+    rules = shd.set_mesh(mesh)
+    Lyr.set_unroll(True)
+    try:
+        fn, args = sp.step_fn(cfg, shape, dp_size=rules.axis_size("dp"),
+                              microbatches=1)
+        if shape.kind == "train":
+            params_s, opt_s, batch_s = args
+            in_sh = (shd.param_shardings(params_s),
+                     type(opt_s)(None, shd.param_shardings(opt_s.master),
+                                 shd.param_shardings(opt_s.m),
+                                 shd.param_shardings(opt_s.v)),
+                     shd.batch_shardings(batch_s))
+        elif shape.kind == "prefill":
+            in_sh = (shd.param_shardings(args[0]),
+                     shd.batch_shardings(args[1]))
+        else:
+            in_sh = (shd.param_shardings(args[0]),
+                     shd.cache_shardings(args[1], cfg),
+                     shd.batch_shardings({"tokens": args[2]})["tokens"])
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text())
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": float(coll["total_bytes"])}
+    finally:
+        Lyr.set_unroll(False)
+        shd.set_mesh(None)
+
+
+def _extrapolate(lo, hi, l_lo, l_hi, l_full):
+    out = {}
+    for k in lo:
+        per = (hi[k] - lo[k]) / (l_hi - l_lo)
+        fixed = lo[k] - l_lo * per
+        out[k] = max(fixed + l_full * per, 0.0)
+        out[k + "_per_layer"] = per
+        out[k + "_fixed"] = fixed
+    return out
+
+
+def probe_cell(arch: str, shape_name: str, mesh, *,
+               cfg_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    if cfg.family == "encdec":
+        rb = _lower_probe(_probe_cfg(cfg, 2, n_enc=2), shape, mesh)
+        re = _lower_probe(_probe_cfg(cfg, 2, n_enc=4), shape, mesh)
+        rd = _lower_probe(_probe_cfg(cfg, 4, n_enc=2), shape, mesh)
+        full = {}
+        for k in rb:
+            enc_per = (re[k] - rb[k]) / 2.0
+            dec_per = (rd[k] - rb[k]) / 2.0
+            fixed = rb[k] - 2 * enc_per - 2 * dec_per
+            full[k] = max(fixed + cfg.n_enc_layers * enc_per
+                          + cfg.n_layers * dec_per, 0.0)
+            full[k + "_per_layer"] = dec_per
+            full[k + "_fixed"] = fixed
+    else:
+        l_lo = cfg.attn_every if cfg.family == "hybrid" else 2
+        l_hi = 2 * l_lo
+        lo = _lower_probe(_probe_cfg(cfg, l_lo), shape, mesh)
+        hi = _lower_probe(_probe_cfg(cfg, l_hi), shape, mesh)
+        n_full = cfg.n_layers - cfg.first_k_dense
+        full = _extrapolate(lo, hi, l_lo, l_hi, n_full)
+
+    chips = mesh.devices.size
+    compute_t = full["flops"] / PEAK_FLOPS          # flops are per-device
+    memory_t = full["bytes"] / HBM_BW
+    coll_t = full["coll"] / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6*N*D train, 2*N*D forward (prefill/decode); MoE: active
+    n_active = cfg.active_param_count()
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill")
+              else shape.global_batch)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    hlo_flops_global = full["flops"] * chips
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "flops_per_device": full["flops"],
+        "bytes_per_device": full["bytes"],
+        "coll_bytes_per_device": full["coll"],
+        "compute_s": compute_t, "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flop_ratio": (model_flops / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "roofline_fraction": (compute_t / bound if bound else 0.0),
+        "step_time_bound_s": bound,
+        "probe_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results_path = out_dir / "results.json"
+    results = {}
+    if results_path.exists():
+        results = json.loads(results_path.read_text())
+
+    mesh = make_production_mesh(multi_pod=False)
+    todo = cells()
+    if args.arch != "all":
+        todo = [(a, s) for a, s in todo if a == args.arch]
+    if args.shape != "all":
+        todo = [(a, s) for a, s in todo if s == args.shape]
+
+    for arch, shape in todo:
+        key = f"{arch}|{shape}"
+        if key in results and "error" not in results[key]:
+            print(f"[roofline] skip cached {key}")
+            continue
+        try:
+            rec = probe_cell(arch, shape, mesh)
+            print(f"[roofline] {key}: dom={rec['dominant']} "
+                  f"comp={rec['compute_s']:.2e}s mem={rec['memory_s']:.2e}s "
+                  f"coll={rec['collective_s']:.2e}s "
+                  f"useful={rec['useful_flop_ratio']:.2f} "
+                  f"({rec['probe_s']}s)")
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "error": f"{type(e).__name__}: {e}"}
+        results[key] = rec
+        results_path.write_text(json.dumps(results, indent=1))
+
+    print(f"[roofline] -> {results_path}")
+
+
+if __name__ == "__main__":
+    main()

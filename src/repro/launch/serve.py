@@ -1,0 +1,52 @@
+"""Serving launcher: AAPA-autoscaled endpoint for any --arch.
+
+    python -m repro.launch.serve --arch stablelm_1_6b --minutes 10
+    python -m repro.launch.serve --arch stablelm_1_6b --dry-run  # decode
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--minutes", type=int, default=10)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_cell
+        rec = run_cell(args.arch, args.shape, args.multi_pod)
+        raise SystemExit(0 if rec.get("ok") else 1)
+
+    import numpy as np
+    import jax
+    from repro.configs import get_config, smoke_config
+    from repro.core import gbdt, pipeline
+    from repro.data.azure_synth import generate_traces
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = smoke_config(get_config(args.arch))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    traces = generate_traces(n_functions=16, n_days=4, seed=5)
+    trained = pipeline.train_aapa(traces,
+                                  gbdt.GBDTConfig(n_rounds=10, depth=3))
+    print(f"[serve] {cfg.name} classifier_acc={trained.test_acc:.3f}")
+
+    import examples.serve_autoscale as demo
+    rng = np.random.default_rng(0)
+    rates = np.full(args.minutes, 120.0)
+    rates[args.minutes // 2] = 2000.0
+    s = demo.run(args.minutes, "aapa", trained, params, cfg, rates, rng)
+    print(f"[serve] {s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)
+plus the functions the dry-run lowers: train_step / prefill / decode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, ShapeSpec, get_config
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the model-input batch of a given shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        n_text = S - (cfg.n_img_tokens or 0)
+        batch = {"tokens": _sds((B, n_text), jnp.int32),
+                 "labels": _sds((B, n_text), jnp.int32)}
+        if cfg.n_img_tokens:
+            batch["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model),
+                                       cfg.jdtype)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = _sds((B, cfg.enc_len, cfg.d_model),
+                                       cfg.jdtype)
+        return batch
+    if shape.kind == "prefill":
+        n_text = S - (cfg.n_img_tokens or 0)
+        batch = {"tokens": _sds((B, n_text), jnp.int32)}
+        if cfg.n_img_tokens:
+            batch["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model),
+                                       cfg.jdtype)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = _sds((B, cfg.enc_len, cfg.d_model),
+                                       cfg.jdtype)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(partial(M.init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def opt_specs(cfg: ModelConfig):
+    params = param_specs(cfg)
+    return jax.eval_shape(opt_lib.init, params)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Decode-shape KV/state cache ShapeDtypeStructs (seq_len deep)."""
+    return jax.eval_shape(
+        partial(M.init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def train_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                       dp_size: int, *, stash_budget: float = 2e9) -> int:
+    """Gradient-accumulation depth chosen so the per-device remat stash
+    (n_layers x live-tokens x d_model x 2B) fits the budget. Power of two,
+    capped so each microbatch still has >= 1 sequence per data shard."""
+    tokens_loc = shape.global_batch * shape.seq_len / max(dp_size, 1)
+    width = cfg.d_model * (cfg.expand if cfg.family in ("ssm", "hybrid")
+                           else 1)
+    stash = cfg.n_layers * tokens_loc * width * 2.0
+    mb, cap = 1, max(shape.global_batch // max(dp_size, 1), 1)
+    while stash / mb > stash_budget and mb < cap:
+        mb *= 2
+    return mb
+
+
+def step_fn(cfg: ModelConfig, shape: ShapeSpec, *, dp_size: int = 16,
+            microbatches: int | None = None):
+    """The function a dry-run cell lowers, plus its abstract args."""
+    if shape.kind == "train":
+        mb = (microbatches if microbatches is not None
+              else train_microbatches(cfg, shape, dp_size))
+        ts = make_train_step(cfg, microbatches=mb)
+        args = (param_specs(cfg), opt_specs(cfg), input_specs(cfg, shape))
+        return ts, args
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return M.prefill(params, batch, cfg, max_len=shape.seq_len)
+        return prefill_fn, (param_specs(cfg), input_specs(cfg, shape))
+    # decode
+    def decode_fn(params, cache, tokens):
+        pos = jnp.int32(shape.seq_len - 1)
+        return M.decode_step(params, cache, tokens, pos, cfg)
+    return decode_fn, (param_specs(cfg), cache_specs(cfg, shape),
+                       input_specs(cfg, shape)["tokens"])

@@ -1,0 +1,92 @@
+"""Production training launcher: --arch x --shape on the production mesh.
+
+On a real TPU pod slice each host runs:
+
+    python -m repro.launch.train --arch deepseek_67b --shape train_4k \
+        --coordinator $COORD --num-hosts $N --host-id $ID
+
+On this CPU container use --dry-run (lower+compile only) or --local-smoke
+(reduced config, real steps on 1 device).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--local-smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="experiments/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    # multi-host bring-up (jax.distributed)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=512"
+
+    import jax
+
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_hosts,
+                                   args.host_id)
+
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.configs import get_config, smoke_config
+    from repro.configs.registry import SHAPES
+    from repro.dist import sharding as shd
+    from repro.launch import specs as sp
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.train import checkpoint as ckpt
+    from repro.train import optimizer as opt_lib
+    from repro.train.train_step import make_train_step
+
+    if args.dry_run:
+        from repro.launch.dryrun import run_cell
+        rec = run_cell(args.arch, args.shape, args.multi_pod)
+        raise SystemExit(0 if rec.get("ok") else 1)
+
+    # local smoke: real optimization steps on the reduced config
+    cfg = smoke_config(get_config(args.arch)) if args.local_smoke \
+        else get_config(args.arch)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_lib.init(params)
+    latest = ckpt.latest_step(args.ckpt_dir)
+    step0 = 0
+    if latest is not None:
+        state, step0 = ckpt.restore(
+            args.ckpt_dir,
+            jax.eval_shape(lambda: {"params": params, "opt": opt_state}))
+        params, opt_state = state["params"], state["opt"]
+        print(f"[train] resumed at step {step0}")
+
+    ts = jax.jit(make_train_step(cfg, microbatches=2))
+    writer = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for step in range(step0, args.steps):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)), jnp.int32)
+        params, opt_state, m = ts(params, opt_state,
+                                  {"tokens": toks, "labels": toks})
+        if step % 10 == 0:
+            print(f"[train] step {step} loss={float(m['loss']):.4f} "
+                  f"({time.time()-t0:.0f}s)")
+        if (step + 1) % args.ckpt_every == 0:
+            writer.save(step + 1, {"params": params, "opt": opt_state})
+    writer.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB:
+``input_specs()`` provides precomputed 1500-frame embeddings, per the
+assignment). Encoder: non-causal self-attention; decoder: causal self +
+cross attention. Both stacks are lax.scan-stacked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.models import layers as Lyr
+from repro.models.common import ModelConfig
+
+
+def _init_enc_layer(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    return {"ln1": Lyr.init_rms(cfg.d_model),
+            "ln2": Lyr.init_rms(cfg.d_model),
+            "attn": Lyr.init_attention(ks[0], cfg),
+            "mlp": Lyr.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_layer(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {"ln1": Lyr.init_rms(cfg.d_model),
+            "ln2": Lyr.init_rms(cfg.d_model),
+            "ln3": Lyr.init_rms(cfg.d_model),
+            "self_attn": Lyr.init_attention(ks[0], cfg),
+            "cross_attn": Lyr.init_attention(ks[1], cfg),
+            "mlp": Lyr.init_mlp(ks[2], cfg)}
+
+
+def init(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 5)
+    enc_ks = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_ks = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": jax.random.normal(ks[2], (cfg.vocab, cfg.d_model),
+                                   cfg.jdtype) * 0.02,
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_ks),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_ks),
+        "enc_norm": Lyr.init_rms(cfg.d_model),
+        "final_norm": Lyr.init_rms(cfg.d_model),
+        "lm_head": jax.random.normal(ks[3], (cfg.d_model, cfg.vocab),
+                                     cfg.jdtype) * cfg.d_model**-0.5,
+    }
+
+
+def encode(params, enc_embeds, cfg: ModelConfig, *, remat=True):
+    """enc_embeds [B, T_enc, D] (stub frontend output) -> [B, T_enc, D]."""
+    def body(h, lp):
+        a = Lyr.rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        a, _ = Lyr.attention(lp["attn"], a, cfg, causal=False)
+        h = h + a
+        m = Lyr.rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        h = h + Lyr.mlp(lp["mlp"], m)
+        return shd.constrain(h, ("dp", "mp", None)), None
+
+    if Lyr.unroll():  # cost-probe mode
+        h = enc_embeds.astype(cfg.jdtype)
+        for i in range(cfg.n_enc_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc_layers"])
+            h, _ = (jax.checkpoint(body) if remat else body)(h, lp)
+        return Lyr.rms_norm(h, params["enc_norm"]["scale"], cfg.norm_eps)
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, enc_embeds.astype(cfg.jdtype),
+                        params["enc_layers"])
+    return Lyr.rms_norm(h, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _dec_block(lp, h, enc_out, cfg, *, cache=None, pos=None):
+    a = Lyr.rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+    self_cache = None if cache is None else cache["self"]
+    a, new_self = Lyr.attention(lp["self_attn"], a, cfg, cache=self_cache,
+                                pos=pos)
+    h = h + a
+    c = Lyr.rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+    c, _ = Lyr.attention(lp["cross_attn"], c, cfg, kv_x=enc_out,
+                         causal=False, use_rope=False)
+    h = h + c
+    m = Lyr.rms_norm(h, lp["ln3"]["scale"], cfg.norm_eps)
+    h = h + Lyr.mlp(lp["mlp"], m)
+    new_cache = None if cache is None else {"self": new_self}
+    return h, new_cache
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat=True,
+            return_hidden: bool = False):
+    """Training forward: batch {"tokens": [B,S], "enc_embeds": [B,T,D]}.
+    Returns (logits [B,S,V], aux=0)."""
+    enc_out = encode(params, batch["enc_embeds"], cfg, remat=remat)
+    h = params["embed"][batch["tokens"]]
+
+    def body(carry, lp):
+        h = carry
+        h, _ = _dec_block(lp, h, enc_out, cfg)
+        return shd.constrain(h, ("dp", "mp", None)), None
+
+    if Lyr.unroll():  # cost-probe mode
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            h, _ = (jax.checkpoint(body) if remat else body)(h, lp)
+    else:
+        body_fn = jax.checkpoint(body) if remat else body
+        h, _ = jax.lax.scan(body_fn, h, params["dec_layers"])
+    h = Lyr.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.float32(0.0)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    def one(_):
+        return {"self": Lyr.init_kv_cache(cfg, batch, max_len)}
+    return {"dec": jax.vmap(one)(jnp.arange(cfg.n_layers)),
+            "enc_out": jnp.zeros((batch, cfg.enc_len, cfg.d_model),
+                                 cfg.jdtype)}
+
+
+def _run_dec_stack(params, dec_cache, h, enc_out, cfg, pos):
+    """Decoder stack with the cache as scan carry, updated in place (no
+    stacked second copy — see transformer._scan_layers_inplace)."""
+
+    def one(h, cache, li):
+        lp = jax.tree.map(lambda a: a[li], params["dec_layers"])
+        lc = jax.tree.map(lambda a: a[li], cache)
+        h, nc = _dec_block(lp, h, enc_out, cfg, cache=lc, pos=pos)
+        cache = jax.tree.map(
+            lambda full, u: jax.lax.dynamic_update_index_in_dim(
+                full, u.astype(full.dtype), li, 0), cache, nc)
+        return h, cache
+
+    if Lyr.unroll():  # cost-probe mode
+        cache = dec_cache
+        for i in range(cfg.n_layers):
+            h, cache = one(h, cache, i)
+        return h, cache
+
+    def body(carry, i):
+        h, cache = carry
+        h, cache = one(h, cache, i)
+        return (h, cache), None
+
+    (h, cache), _ = jax.lax.scan(body, (h, dec_cache),
+                                 jnp.arange(cfg.n_layers))
+    return h, cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Encode + run the decoder prompt. Returns (last logits, cache)."""
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    enc_out = encode(params, batch["enc_embeds"], cfg, remat=False)
+    h = params["embed"][batch["tokens"]]
+    h, new_dec = _run_dec_stack(params, cache["dec"], h, enc_out, cfg, 0)
+    h = Lyr.rms_norm(h[:, -1:], params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, {"dec": new_dec, "enc_out": enc_out}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    h = params["embed"][tokens]
+    enc_out = cache["enc_out"]
+    h, new_dec = _run_dec_stack(params, cache["dec"], h, enc_out, cfg, pos)
+    h = Lyr.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, {"dec": new_dec, "enc_out": enc_out}

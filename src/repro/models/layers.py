@@ -1,0 +1,378 @@
+"""Core transformer layers: RMSNorm, RoPE, chunked-flash GQA attention,
+MLA (DeepSeek-V2 multi-head latent attention), SwiGLU MLP.
+
+Conventions: params are nested dicts of arrays; functions are pure.
+Activations default to bf16, accumulation/softmax in f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+NEG_INF = -1e30
+
+# Cost-probe mode (see launch/roofline.py): XLA cost_analysis counts a
+# scan body once regardless of trip count, so roofline probes unroll every
+# inner loop (flash tiles, SSD chunks, CE chunks, layer stacks) into
+# straight-line HLO. Never enabled in production paths.
+_UNROLL = False
+
+
+def set_unroll(v: bool) -> None:
+    global _UNROLL
+    _UNROLL = v
+
+
+def unroll() -> bool:
+    return _UNROLL
+
+
+def rms_norm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def init_rms(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ------------------------------------------------------------------ RoPE ----
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x [..., S, H, hd] (hd even), positions [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                     # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- chunked flash attention ----
+def _flash_q_chunk(q, k, v, q_pos0, kv_chunk, scale, causal=True,
+                   kv_valid=None, unroll_kv=False):
+    """Online-softmax attention of one query chunk against all of k/v.
+
+    q [B, qc, H, hd]; k/v [B, S, KV, hd]; causal with absolute offset
+    q_pos0. Scans kv chunks carrying (m, l, acc) in f32.
+    """
+    B, qc, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, qc, KV, G, hd)
+    n_kv = S // kv_chunk
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * kv_chunk, kv_chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * kv_chunk, kv_chunk, 1)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ks,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_ids = q_pos0 + jnp.arange(qc)
+            kv_ids = i * kv_chunk + jnp.arange(kv_chunk)
+            mask = q_ids[:, None] >= kv_ids[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_valid is not None:
+            vmask = jax.lax.dynamic_slice_in_dim(kv_valid, i * kv_chunk,
+                                                 kv_chunk, 0)
+            s = jnp.where(vmask[None, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+    if unroll_kv:
+        carry = (m0, l0, a0)
+        for i in range(n_kv):
+            carry, _ = body(carry, jnp.int32(i))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_kv))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, hd)
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, q_chunk=512, kv_chunk=1024, causal=True):
+    """Chunked attention. q [B,Sq,H,hd], k/v [B,Skv,KV,hd] -> [B,Sq,H,hd].
+
+    Pure-JAX flash: O(chunk^2) memory, online softmax, GQA by grouping.
+    Non-causal (causal=False) supports cross/encoder attention with
+    Sq != Skv.
+    """
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, Skv)
+    q_pad = 0
+    if S % q_chunk:  # pad queries to a chunk multiple, slice the result
+        q_pad = q_chunk - S % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        S = S + q_pad
+    if Skv % kv_chunk:  # pad kv to a chunk multiple with masked tail
+        pad = kv_chunk - Skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if not causal:  # causal mask already excludes the tail
+            kv_valid = jnp.arange(Skv + pad) < Skv
+        else:
+            kv_valid = None
+    else:
+        kv_valid = None
+    scale = 1.0 / (hd ** 0.5)
+    if _UNROLL:
+        q_chunk = min(2048, S)
+        kv_chunk = min(2048, k.shape[1])
+    nq = S // q_chunk
+    qs = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    # checkpoint each query chunk: backward recomputes the chunk's scores
+    # instead of storing per-kv-iteration probability tiles (the flash-
+    # attention memory property, at ~+1/3 attention flops in backward)
+    @jax.checkpoint
+    def one(args):
+        i, qb = args
+        return _flash_q_chunk(qb, k, v, i * q_chunk, kv_chunk, scale,
+                              causal=causal, kv_valid=kv_valid,
+                              unroll_kv=_UNROLL)
+
+    if _UNROLL:
+        outs = jnp.stack([one((jnp.int32(i), qs[i])) for i in range(nq)])
+    else:
+        outs = jax.lax.map(one, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out[:, :S - q_pad] if q_pad else out
+
+
+def decode_attention(q, k_cache, v_cache, pos, scale=None):
+    """Single-token attention over a cache.
+
+    q [B,1,H,hd]; caches [B,S,KV,hd] (any storage dtype — fp8 caches are
+    upcast at use); pos [] int32 = index of the new token (attends to
+    cache positions <= pos). Returns [B,1,H,hd].
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale or 1.0 / (hd ** 0.5)
+    if k_cache.dtype.itemsize < 2:  # fp8 storage -> bf16 compute
+        k_cache = k_cache.astype(q.dtype)
+        v_cache = v_cache.astype(q.dtype)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------ GQA block ----
+def init_attention(rng, cfg: ModelConfig):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hdim
+    k = jax.random.split(rng, 4)
+    std = D ** -0.5
+    p = {
+        "wq": jax.random.normal(k[0], (D, H, hd), cfg.jdtype) * std,
+        "wk": jax.random.normal(k[1], (D, KV, hd), cfg.jdtype) * std,
+        "wv": jax.random.normal(k[2], (D, KV, hd), cfg.jdtype) * std,
+        "wo": jax.random.normal(k[3], (H, hd, D), cfg.jdtype) * std,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd)
+        p["k_norm"] = init_rms(hd)
+    return p
+
+
+def attention(p, x, cfg: ModelConfig, *, positions=None, cache=None,
+              pos=None, kv_x=None, causal=True, use_rope=True):
+    """GQA attention. x [B,S,D].
+
+    Training/prefill: cache=None, full causal flash. If `cache` is given
+    (dict with k/v [B,Smax,KV,hd]) and S==1, runs a decode step writing at
+    `pos` and returns (out, new_cache); prefill with cache returns the
+    populated cache. Cross attention: pass kv_x (keys/values source) and
+    causal=False; with a cache, cross k/v are computed once at prefill and
+    reused at decode (pass kv_x=None then).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+
+    if use_rope:
+        if positions is None:
+            if cache is not None and S == 1:
+                positions = jnp.full((B, 1), pos, jnp.int32)
+            else:
+                positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kv_pos = jnp.broadcast_to(jnp.arange(k.shape[1]), k.shape[:2]) \
+            if kv_x is not None else positions
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+
+    if cache is None:
+        out = flash_attention(q, k, v, causal=causal)
+        new_cache = None
+    elif S == 1:  # decode
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(cache["k"].dtype),
+                                                 pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(cache["v"].dtype),
+                                                 pos, 1)
+        out = decode_attention(q, kc, vc, pos)
+        new_cache = {"k": kc, "v": vc}
+    else:  # prefill into cache
+        out = flash_attention(q, k, v)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, 1)
+        new_cache = {"k": kc, "v": vc}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return {"k": jnp.zeros((batch, max_len, cfg.kv_heads, cfg.hdim),
+                           cfg.cache_jdtype),
+            "v": jnp.zeros((batch, max_len, cfg.kv_heads, cfg.hdim),
+                           cfg.cache_jdtype)}
+
+
+# ------------------------------------------------------------------- MLA ----
+def init_mla(rng, cfg: ModelConfig):
+    """DeepSeek-V2 multi-head latent attention (no q compression, as in
+    V2-Lite): q proj full rank; kv compressed to kv_lora_rank + rope dims."""
+    D, H = cfg.d_model, cfg.n_heads
+    L, rd, nd, vd = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    k = jax.random.split(rng, 5)
+    std = D ** -0.5
+    return {
+        "wq": jax.random.normal(k[0], (D, H, nd + rd), cfg.jdtype) * std,
+        "w_dkv": jax.random.normal(k[1], (D, L + rd), cfg.jdtype) * std,
+        "kv_norm": init_rms(L),
+        "w_uk": jax.random.normal(k[2], (L, H, nd), cfg.jdtype) * (L ** -0.5),
+        "w_uv": jax.random.normal(k[3], (L, H, vd), cfg.jdtype) * (L ** -0.5),
+        "wo": jax.random.normal(k[4], (H, vd, D), cfg.jdtype) * std,
+    }
+
+
+def mla_attention(p, x, cfg: ModelConfig, *, cache=None, pos=None):
+    """MLA forward. Cache holds the compressed c_kv and rope key only —
+    the paper-faithful memory saving. Decode uses the absorption trick
+    (scores computed in latent space; no per-step re-expansion)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    L, rd, nd, vd = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    scale = 1.0 / ((nd + rd) ** 0.5)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])          # [B,S,H,nd+rd]
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+    ckv_full = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"])  # [B,S,L+rd]
+    c_kv = rms_norm(ckv_full[..., :L], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_pe = ckv_full[..., L:][:, :, None, :]              # [B,S,1,rd]
+
+    if cache is not None and S == 1:  # ---- decode (absorbed) ----
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+        k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, 1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype), pos, 1)
+        new_cache = {"c_kv": ckv_c, "k_pe": kpe_c}
+        if ckv_c.dtype.itemsize < 2:  # fp8 storage -> bf16 compute
+            ckv_c = ckv_c.astype(x.dtype)
+            kpe_c = kpe_c.astype(x.dtype)
+        # absorb W_uk into the query: q_lat [B,H,L]
+        q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["w_uk"])[:, 0]
+        s = (jnp.einsum("bhl,bsl->bhs", q_lat, ckv_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhk,bsk->bhs", q_pe[:, 0], kpe_c,
+                          preferred_element_type=jnp.float32)) * scale
+        Smax = ckv_c.shape[1]
+        s = jnp.where((jnp.arange(Smax) <= pos)[None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhs,bsl->bhl", pr.astype(ckv_c.dtype), ckv_c,
+                           preferred_element_type=jnp.float32)
+        out = jnp.einsum("bhl,lhv->bhv", o_lat.astype(x.dtype), p["w_uv"])
+        out = out[:, None]                                # [B,1,H,vd]
+    else:  # ---- train / prefill (expanded) ----
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+        k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsl,lhv->bshv", c_kv, p["w_uv"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe, (B, S, H, rd))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        # pad v to qk head dim for the shared flash kernel, slice after
+        pad = (nd + rd) - vd
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        out = flash_attention(q_full, k_full, v_pad)[..., :vd]
+        if cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, 1)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype),
+                0, 1)
+            new_cache = {"c_kv": ckv_c, "k_pe": kpe_c}
+        else:
+            new_cache = None
+
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank),
+                              cfg.cache_jdtype),
+            "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_dim),
+                              cfg.cache_jdtype)}
+
+
+# ---------------------------------------------------------------- SwiGLU ----
+def init_mlp(rng, cfg: ModelConfig, d_ff: int | None = None):
+    D = cfg.d_model
+    Ff = d_ff or cfg.d_ff
+    k = jax.random.split(rng, 3)
+    return {
+        "w_gate": jax.random.normal(k[0], (D, Ff), cfg.jdtype) * D**-0.5,
+        "w_up": jax.random.normal(k[1], (D, Ff), cfg.jdtype) * D**-0.5,
+        "w_down": jax.random.normal(k[2], (Ff, D), cfg.jdtype) * Ff**-0.5,
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

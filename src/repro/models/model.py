@@ -1,0 +1,71 @@
+"""Family dispatch: one API over decoder-only and encoder-decoder models."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.common import ModelConfig
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init(rng, cfg: ModelConfig):
+    return _mod(cfg).init(rng, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            return_hidden: bool = False):
+    return _mod(cfg).forward(params, batch, cfg, remat=remat,
+                             return_hidden=return_hidden)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    return _mod(cfg).prefill(params, batch, cfg, max_len)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    return _mod(cfg).decode_step(params, cache, tokens, pos, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return _mod(cfg).init_cache(cfg, batch, max_len)
+
+
+def _ce_chunk(args):
+    """CE over one sequence chunk (rematted: logits never persist)."""
+    hc, labels_c, lm_head = args
+    logits = jnp.einsum("bsd,dv->bsv", hc, lm_head).astype(jnp.float32)
+    valid = labels_c >= 0
+    safe = jnp.where(valid, labels_c, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (-jnp.sum(jnp.where(valid, ll, 0.0)),
+            jnp.sum(valid).astype(jnp.float32))
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            aux_weight: float = 0.01, ce_chunk: int = 512):
+    """Next-token cross-entropy (+ MoE aux), computed in sequence chunks so
+    the full-vocab [B,S,V] logits tensor never materializes. batch needs
+    "tokens" and "labels" (-100 = ignore)."""
+    h, aux = forward(params, batch, cfg, remat=remat, return_hidden=True)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    c = ce_chunk if S % ce_chunk == 0 else S
+    nc = S // c
+    hc = h.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, c).transpose(1, 0, 2)
+    fn = jax.checkpoint(_ce_chunk) if (remat and nc > 1) else _ce_chunk
+    from repro.models import layers as Lyr
+    if Lyr.unroll():
+        outs = [fn((hc[i], lc[i], params["lm_head"])) for i in range(nc)]
+        nll = jnp.stack([o[0] for o in outs])
+        cnt = jnp.stack([o[1] for o in outs])
+    else:
+        nll, cnt = jax.lax.map(
+            lambda a: fn((a[0], a[1], params["lm_head"])), (hc, lc))
+    ce = jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}

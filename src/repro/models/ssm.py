@@ -1,0 +1,170 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (block-decomposed: exact
+quadratic attention within chunks + linear state passing across chunks);
+decode is the O(1)-per-token recurrent update. n_groups=1 (B/C shared
+across heads), head_dim P, state N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as Lyr
+from repro.models.common import ModelConfig
+from repro.models.layers import init_rms, rms_norm
+
+
+def init_mamba2(rng, cfg: ModelConfig):
+    D, Din, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    conv_ch = Din + 2 * cfg.n_groups * N
+    k = jax.random.split(rng, 4)
+    return {
+        "in_proj": jax.random.normal(
+            k[0], (D, 2 * Din + 2 * cfg.n_groups * N + H),
+            cfg.jdtype) * D**-0.5,
+        "conv_w": jax.random.normal(k[1], (cfg.d_conv, conv_ch),
+                                    cfg.jdtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), cfg.jdtype),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": init_rms(Din),
+        "out_proj": jax.random.normal(k[3], (Din, D),
+                                      cfg.jdtype) * Din**-0.5,
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x [B,S,C], w [K,C] -> [B,S,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, *, return_state=False):
+    """Chunked SSD: one lax.scan over chunks fuses the intra-chunk
+    quadratic part with the inter-chunk state recurrence, so the largest
+    transient is the per-chunk [b,Q,Q,h] score tile (VMEM-friendly),
+    never a whole-[b,c,q,k,h] tensor.
+
+    xh [B,L,H,P]; dt [B,L,H] (post-softplus); A [H] (negative);
+    Bm, Cm [B,L,N] (n_groups=1, broadcast over heads).
+    Returns y [B,L,H,P] (and the final state [B,H,N,P] if requested).
+    """
+    Bsz, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    nc = L // Q
+    # chunk-major for the scan: [nc, b, Q, ...]
+    xc = xh.reshape(Bsz, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bsz, nc, Q, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bsz, nc, Q, N).transpose(1, 0, 2, 3)
+    qi = jnp.arange(Q)
+    tril = (qi[:, None] >= qi[None, :])[None, :, :, None]  # [1,q,k,1]
+
+    def body(state, inp):
+        xq, dtq, Bq, Cq = inp                           # [b,Q,...]
+        a = dtq * A[None, None, :]                      # [b,Q,h]
+        cum = jnp.cumsum(a, axis=1)
+        # intra-chunk
+        CB = jnp.einsum("bqn,bkn->bqk", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]   # [b,q,k,h]
+        decay = jnp.where(tril, jnp.exp(seg), 0.0)
+        scores = CB[..., None] * decay * dtq[:, None]   # [b,q,k,h]
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores,
+                            xq.astype(jnp.float32))
+        # contribution of the incoming state
+        y_off = jnp.einsum("bqn,bqh,bhnp->bqhp", Cq.astype(jnp.float32),
+                           jnp.exp(cum), state)
+        # state update
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)       # [b,Q,h]
+        inc = jnp.einsum("bkn,bkh,bkhp->bhnp", Bq.astype(jnp.float32),
+                         decay_out * dtq, xq.astype(jnp.float32))
+        chunk_decay = jnp.exp(cum[:, -1, :])            # [b,h]
+        new_state = state * chunk_decay[..., None, None] + inc
+        return new_state, (y_diag + y_off).astype(xh.dtype)
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    if Lyr.unroll():
+        state, ys = init, []
+        for i in range(nc):
+            state, yi = body(state, (xc[i], dtc[i], Bc[i], Cc[i]))
+            ys.append(yi)
+        final_state, yc = state, jnp.stack(ys)
+    else:
+        final_state, yc = jax.lax.scan(body, init, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, L, H, P)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(state, xt, dt, A, Bt, Ct):
+    """One recurrent step. state [B,H,N,P]; xt [B,H,P]; dt [B,H];
+    Bt, Ct [B,N]. Returns (new_state, y [B,H,P])."""
+    da = jnp.exp(dt * A[None, :])                       # [B,H]
+    inc = jnp.einsum("bn,bh,bhp->bhnp", Bt.astype(jnp.float32),
+                     dt, xt.astype(jnp.float32))
+    new_state = state * da[..., None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", Ct.astype(jnp.float32), new_state)
+    return new_state, y.astype(xt.dtype)
+
+
+def mamba2_block(p, x, cfg: ModelConfig, *, cache=None, pos=None):
+    """Mamba2 block. x [B,S,D]. cache = {"conv": [B,d_conv-1,C],
+    "ssm": [B,H,N,P]} for decode (S==1). Returns (out, new_cache)."""
+    B, S, D = x.shape
+    Din, N, H, P = cfg.d_inner, cfg.d_state, cfg.ssm_heads, cfg.ssm_head_dim
+    G = cfg.n_groups
+
+    proj = x @ p["in_proj"]                             # [B,S,...]
+    z, xBC, dt_raw = jnp.split(
+        proj, [Din, 2 * Din + 2 * G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])    # [B,S,H]
+    A = -jnp.exp(p["A_log"])                            # [H]
+
+    if cache is None or S > 1:
+        conv_out = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        x_ssm, Bm, Cm = jnp.split(conv_out, [Din, Din + G * N], axis=-1)
+        xh = x_ssm.reshape(B, S, H, P)
+        y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                     return_state=True)
+        y = y + p["D_skip"][None, None, :, None] * xh
+        new_cache = None
+        if cache is not None:  # prefill: hand the final states to decode
+            conv_state = jnp.pad(
+                xBC, ((0, 0), (max(cfg.d_conv - 1 - S, 0), 0), (0, 0))
+            )[:, -(cfg.d_conv - 1):]
+            new_cache = {"conv": conv_state.astype(cfg.jdtype),
+                         "ssm": final_state}
+    else:  # decode
+        conv_buf = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC],
+                                   axis=1)              # [B,d_conv,C]
+        conv_out = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) \
+            + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None]       # [B,1,C]
+        x_ssm, Bm, Cm = jnp.split(conv_out, [Din, Din + G * N], axis=-1)
+        xh = x_ssm.reshape(B, H, P)
+        new_ssm, y = ssd_decode_step(cache["ssm"], xh, dt[:, 0], A,
+                                     Bm[:, 0], Cm[:, 0])
+        y = (y + p["D_skip"][None, :, None] * xh)[:, None]  # [B,1,H,P]
+        new_cache = {"conv": conv_buf[:, 1:].astype(cfg.jdtype),
+                     "ssm": new_ssm}
+
+    y = y.reshape(B, S, Din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"]["scale"], cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    conv_ch = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {"conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch), cfg.jdtype),
+            "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.d_state,
+                              cfg.ssm_head_dim), jnp.float32)}

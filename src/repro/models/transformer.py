@@ -1,0 +1,313 @@
+"""Unified decoder-only model covering the dense / moe_mla / moe_gqa /
+ssm / hybrid / vlm families. Layers are lax.scan-stacked (single-layer HLO
+=> tractable 512-device compiles) with optional remat.
+
+API:
+    init(rng, cfg)                    -> params
+    forward(params, batch, cfg)       -> (logits, aux)   [training]
+    prefill(params, tokens, cfg, L)   -> (logits_last, cache)
+    decode_step(params, cache, tok, pos, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.models import layers as Lyr
+from repro.models import moe as Moe
+from repro.models import ssm as Ssm
+from repro.models.common import ModelConfig
+
+
+# ----------------------------------------------------------------- blocks ----
+def init_block(rng, cfg: ModelConfig, *, dense_ff: bool = False):
+    """One residual block's params for the given family."""
+    ks = jax.random.split(rng, 4)
+    if cfg.family in ("ssm", "hybrid"):
+        return {"norm": Lyr.init_rms(cfg.d_model),
+                "mixer": Ssm.init_mamba2(ks[0], cfg)}
+    p = {"ln1": Lyr.init_rms(cfg.d_model), "ln2": Lyr.init_rms(cfg.d_model)}
+    if cfg.family == "moe_mla":
+        p["attn"] = Lyr.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = Lyr.init_attention(ks[0], cfg)
+    if cfg.family in ("moe_mla", "moe_gqa") and not dense_ff:
+        p["moe"] = Moe.init_moe(ks[1], cfg)
+    else:
+        ff = cfg.d_ff_dense if (dense_ff and cfg.d_ff_dense) else cfg.d_ff
+        p["mlp"] = Lyr.init_mlp(ks[1], cfg, d_ff=ff)
+    return p
+
+
+def block_forward(p, x, cfg: ModelConfig, *, cache=None, pos=None,
+                  dense_ff: bool = False):
+    """Residual block. Returns (x, aux, new_cache)."""
+    aux = jnp.float32(0.0)
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_cache = Ssm.mamba2_block(
+            p["mixer"], Lyr.rms_norm(x, p["norm"]["scale"], cfg.norm_eps),
+            cfg, cache=cache, pos=pos)
+        return x + h, aux, new_cache
+
+    h = Lyr.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.family == "moe_mla":
+        h, attn_cache = Lyr.mla_attention(p["attn"], h, cfg, cache=cache,
+                                          pos=pos)
+    else:
+        h, attn_cache = Lyr.attention(p["attn"], h, cfg, cache=cache,
+                                      pos=pos)
+    x = x + h
+    h = Lyr.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    if "moe" in p:
+        h, aux = Moe.moe_block(p["moe"], h, cfg)
+    else:
+        h = Lyr.mlp(p["mlp"], h)
+    return x + h, aux, attn_cache
+
+
+# ------------------------------------------------------------------ model ----
+def _n_scan_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers - cfg.first_k_dense
+
+
+def init(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 6)
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                   cfg.jdtype) * 0.02,
+        "final_norm": Lyr.init_rms(cfg.d_model),
+        "lm_head": jax.random.normal(ks[1], (cfg.d_model, cfg.vocab),
+                                     cfg.jdtype) * cfg.d_model**-0.5,
+    }
+    # leading dense layers of MoE archs live outside the scan
+    if cfg.first_k_dense:
+        dks = jax.random.split(ks[2], cfg.first_k_dense)
+        params["dense_layers"] = [init_block(k, cfg, dense_ff=True)
+                                  for k in dks]
+    n_scan = _n_scan_layers(cfg)
+    lks = jax.random.split(ks[3], n_scan)
+    params["layers"] = jax.vmap(lambda k: init_block(k, cfg))(lks)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = {
+            "ln1": Lyr.init_rms(cfg.d_model),
+            "ln2": Lyr.init_rms(cfg.d_model),
+            "attn": Lyr.init_attention(ks[4], cfg),
+            "mlp": Lyr.init_mlp(ks[5], cfg),
+        }
+    return params
+
+
+def _shared_attn_block(sp, x, cfg, *, cache=None, pos=None):
+    h = Lyr.rms_norm(x, sp["ln1"]["scale"], cfg.norm_eps)
+    h, new_cache = Lyr.attention(sp["attn"], h, cfg, cache=cache, pos=pos)
+    x = x + h
+    h = Lyr.rms_norm(x, sp["ln2"]["scale"], cfg.norm_eps)
+    return x + Lyr.mlp(sp["mlp"], h), new_cache
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """tokens (+ optional stub-frontend embeddings) -> h [B, S_total, D]."""
+    h = params["embed"][batch["tokens"]]
+    if cfg.n_img_tokens and "img_embeds" in batch:
+        h = jnp.concatenate(
+            [batch["img_embeds"].astype(h.dtype), h], axis=1)
+    return h
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            return_hidden: bool = False):
+    """Training forward. batch {"tokens": [B,S], ...} -> (logits, aux),
+    or (hidden, aux) with return_hidden=True (chunked-CE path skips the
+    full-vocab logits materialization)."""
+    h = _embed_inputs(params, batch, cfg)
+    h = shd.constrain(h, ("dp", None, None))
+    aux_total = jnp.float32(0.0)
+
+    for dp in params.get("dense_layers", []):
+        h, aux, _ = block_forward(dp, h, cfg, dense_ff=True)
+        aux_total += aux
+
+    shared = params.get("shared_attn")
+
+    def scan_body(carry, inp):
+        h, aux_acc, idx = carry
+        lp = inp
+        h, aux, _ = block_forward(lp, h, cfg)
+        if shared is not None and cfg.attn_every:
+            def with_attn(h):
+                out, _ = _shared_attn_block(shared, h, cfg)
+                return out
+            h = jax.lax.cond((idx + 1) % cfg.attn_every == 0,
+                             with_attn, lambda h: h, h)
+        # sequence-sharded carry: the remat stash (one [B,S,D] per layer)
+        # shards over BOTH dp and the model axis; XLA re-gathers per layer
+        # where attention needs the full sequence (sequence parallelism)
+        h = shd.constrain(h, ("dp", "mp", None))
+        return (h, aux_acc + aux, idx + 1), None
+
+    if Lyr.unroll():  # cost-probe mode: straight-line layers
+        n_scan = _n_scan_layers(cfg)
+        for i in range(n_scan):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            step = jax.checkpoint(block_forward, static_argnums=(2,)) \
+                if remat else block_forward
+            h, aux, _ = step(lp, h, cfg)
+            aux_total += aux
+            if shared is not None and cfg.attn_every \
+                    and (i + 1) % cfg.attn_every == 0:
+                h, _ = _shared_attn_block(shared, h, cfg)
+    else:
+        body = jax.checkpoint(scan_body) if remat else scan_body
+        (h, aux_total, _), _ = jax.lax.scan(
+            body, (h, aux_total, jnp.int32(0)), params["layers"])
+
+    h = Lyr.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.n_img_tokens and "img_embeds" in batch:
+        h = h[:, batch["img_embeds"].shape[1]:]   # loss on text positions
+    if return_hidden:
+        return h, aux_total
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return shd.constrain(logits, ("dp", None, "mp")), aux_total
+
+
+# ------------------------------------------------------------------ cache ----
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-layer cache pytree (+ shared-attn caches for hybrid)."""
+    n_scan = _n_scan_layers(cfg)
+
+    def one_layer(_):
+        if cfg.family in ("ssm", "hybrid"):
+            return Ssm.init_ssm_cache(cfg, batch)
+        if cfg.family == "moe_mla":
+            return Lyr.init_mla_cache(cfg, batch, max_len)
+        return Lyr.init_kv_cache(cfg, batch, max_len)
+
+    stacked = jax.vmap(one_layer)(jnp.arange(n_scan))
+    cache = {"layers": stacked}
+    if cfg.first_k_dense:
+        cache["dense_layers"] = [one_layer(0)
+                                 for _ in range(cfg.first_k_dense)]
+    if cfg.family == "hybrid" and cfg.attn_every:
+        n_apps = n_scan // cfg.attn_every
+        cache["shared"] = jax.vmap(
+            lambda _: Lyr.init_kv_cache(cfg, batch, max_len))(
+                jnp.arange(n_apps))
+    return cache
+
+
+def _scan_layers_inplace(params, cache_stacked, h, cfg: ModelConfig, *,
+                         start: int, count: int, pos, update_at=None):
+    """Run `count` stacked layers with the cache as scan carry, updated
+    in place (lax.dynamic_update_index) — no second stacked cache copy is
+    ever materialized, so decode/prefill memory is ~the cache itself.
+
+    update_at: position written in the sequence dim for KV caches (decode:
+    pos; prefill: 0). Returns (h, cache_stacked)."""
+
+    def one(h, cache, li):
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        lc = jax.tree.map(lambda a: a[li], cache)
+        h, _, nc = block_forward(lp, h, cfg, cache=lc, pos=pos)
+        cache = jax.tree.map(
+            lambda full, u: jax.lax.dynamic_update_index_in_dim(
+                full, u.astype(full.dtype), li, 0), cache, nc)
+        return h, cache
+
+    if Lyr.unroll():  # cost-probe mode: straight-line layers
+        cache = cache_stacked
+        for i in range(count):
+            h, cache = one(h, cache, start + i)
+        return h, cache
+
+    def body(carry, i):
+        h, cache = carry
+        h, cache = one(h, cache, start + i)
+        return (h, cache), None
+
+    (h, cache), _ = jax.lax.scan(
+        body, (h, cache_stacked), jnp.arange(count))
+    return h, cache
+
+
+def _run_stack_with_cache(params, cache, h, cfg: ModelConfig, pos):
+    """Layer stack + (for hybrid) block-structured shared attention with
+    per-application caches. Returns (h, new_cache)."""
+    shared = params.get("shared_attn")
+    n_scan = _n_scan_layers(cfg)
+    layer_cache = cache["layers"]
+
+    if shared is not None and cfg.attn_every:
+        ae = cfg.attn_every
+        n_apps = n_scan // ae
+        shared_cache = cache["shared"]
+        for app in range(n_apps):
+            h, layer_cache = _scan_layers_inplace(
+                params, layer_cache, h, cfg, start=app * ae, count=ae,
+                pos=pos)
+            sc = jax.tree.map(lambda c: c[app], shared_cache)
+            h, new_sc = _shared_attn_block(shared, h, cfg, cache=sc,
+                                           pos=pos)
+            shared_cache = jax.tree.map(
+                lambda full, u: full.at[app].set(u.astype(full.dtype)),
+                shared_cache, new_sc)
+        tail = n_scan - n_apps * ae
+        if tail:
+            h, layer_cache = _scan_layers_inplace(
+                params, layer_cache, h, cfg, start=n_apps * ae,
+                count=tail, pos=pos)
+        new_cache = dict(cache)
+        new_cache["layers"] = layer_cache
+        new_cache["shared"] = shared_cache
+        return h, new_cache
+
+    h, layer_cache = _scan_layers_inplace(params, layer_cache, h, cfg,
+                                          start=0, count=n_scan, pos=pos)
+    new_cache = dict(cache)
+    new_cache["layers"] = layer_cache
+    return h, new_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens [B,1] int32, pos [] int32.
+    Returns (logits [B,1,V], new_cache)."""
+    h = params["embed"][tokens]
+
+    new_dense = []
+    for dp, dc in zip(params.get("dense_layers", []),
+                      cache.get("dense_layers", [])):
+        h, _, nc = block_forward(dp, h, cfg, cache=dc, pos=pos,
+                                 dense_ff=True)
+        new_dense.append(nc)
+
+    h, new_cache = _run_stack_with_cache(params, cache, h, cfg, pos)
+    if new_dense:
+        new_cache["dense_layers"] = new_dense
+
+    h = Lyr.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Populate a cache from a prompt. Returns (last-token logits, cache)."""
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    h = _embed_inputs(params, batch, cfg)
+    h = shd.constrain(h, ("dp", None, None))
+
+    new_dense = []
+    for dp, dc in zip(params.get("dense_layers", []),
+                      cache.get("dense_layers", [])):
+        h, _, nc = block_forward(dp, h, cfg, cache=dc, pos=0,
+                                 dense_ff=True)
+        new_dense.append(nc)
+
+    h, new_cache = _run_stack_with_cache(params, cache, h, cfg, pos=0)
+    if new_dense:
+        new_cache["dense_layers"] = new_dense
+
+    h = Lyr.rms_norm(h[:, -1:], params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits, new_cache

@@ -1,0 +1,163 @@
+"""Serving engine: continuous-batching decode over replica lanes, with the
+AAPA autoscaler as the replica control plane.
+
+A *replica* is one model instance with `lanes` concurrent decode slots
+(continuous batching). The engine keeps a FIFO of requests; each engine
+step admits requests to free slots across all ready replicas, runs one
+batched decode step, and retires finished sequences. Replica counts come
+from an autoscaling Controller fed with the observed arrival trace — this
+is the paper's system applied to model serving (DESIGN.md §2).
+
+Pod startup latency is modelled (a replica added at t serves from
+t + startup). On this CPU container the model is a reduced config; on TPU
+the same engine drives pjit-sharded decode_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float            # seconds
+    prompt_len: int
+    gen_len: int
+    start: float = -1.0
+    finish: float = -1.0
+    tokens_done: int = 0
+    slot: int = -1
+
+
+@dataclasses.dataclass
+class EngineStats:
+    served: int = 0
+    slo_violations: int = 0
+    cold_starts: int = 0
+    latencies_ms: list = dataclasses.field(default_factory=list)
+    replica_seconds: float = 0.0
+    steps: int = 0
+
+
+class ServingEngine:
+    """Discrete-time engine: step() advances one decode tick."""
+
+    def __init__(self, cfg, params, *, lanes_per_replica: int = 4,
+                 max_replicas: int = 8, max_len: int = 64,
+                 step_time_s: float = 0.05, startup_s: float = 2.0,
+                 slo_s: float = 1.0):
+        self.cfg = cfg
+        self.params = params
+        self.lanes = lanes_per_replica
+        self.max_replicas = max_replicas
+        self.max_len = max_len
+        self.step_time = step_time_s
+        self.startup_s = startup_s
+        self.slo_s = slo_s
+
+        self.t = 0.0
+        self.ready_replicas = 1
+        self.starting: list[float] = []     # ready-at times
+        self.queue: deque[Request] = deque()
+        n_slots = max_replicas * lanes_per_replica
+        self.cache = M.init_cache(cfg, n_slots, max_len)
+        self.active: dict[int, Request] = {}   # slot -> request
+        self.stats = EngineStats()
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg))
+
+    # ------------------------------------------------------------- control
+    def scale_to(self, desired: int) -> None:
+        desired = int(np.clip(desired, 1, self.max_replicas))
+        total = self.ready_replicas + len(self.starting)
+        if desired > total:
+            for _ in range(desired - total):
+                self.starting.append(self.t + self.startup_s)
+        elif desired < total:
+            drop = total - desired
+            while drop and self.starting:
+                self.starting.pop()
+                drop -= 1
+            self.ready_replicas = max(self.ready_replicas - drop, 1)
+
+    # --------------------------------------------------------------- step
+    def submit(self, req: Request) -> None:
+        if self.ready_replicas == 0 and not self.active:
+            self.stats.cold_starts += 1
+        self.queue.append(req)
+
+    def step(self) -> None:
+        # pods finishing startup
+        still = []
+        for ready_at in self.starting:
+            if ready_at <= self.t:
+                self.ready_replicas += 1
+            else:
+                still.append(ready_at)
+        self.starting = still
+
+        n_slots = self.ready_replicas * self.lanes
+        # admit queued requests to free slots
+        free = [s for s in range(n_slots) if s not in self.active]
+        while self.queue and free:
+            req = self.queue.popleft()
+            req.slot = free.pop(0)
+            req.start = self.t
+            self.active[req.slot] = req
+
+        if self.active:
+            # one decode step for every active slot (continuous batching)
+            total_slots = self.max_replicas * self.lanes
+            toks = np.zeros((total_slots, 1), np.int32)
+            for s, req in self.active.items():
+                toks[s, 0] = 1 + (req.tokens_done % 7)
+            pos = jnp.int32(int(min(self.t / self.step_time,
+                                    self.max_len - 1)) % self.max_len)
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks), pos)
+            done = []
+            for s, req in self.active.items():
+                req.tokens_done += 1
+                if req.tokens_done >= req.gen_len:
+                    req.finish = self.t + self.step_time
+                    lat = req.finish - req.arrival
+                    self.stats.latencies_ms.append(lat * 1e3)
+                    self.stats.served += 1
+                    if lat > self.slo_s:
+                        self.stats.slo_violations += 1
+                    done.append(s)
+            for s in done:
+                del self.active[s]
+
+        self.stats.replica_seconds += (self.ready_replicas
+                                       + len(self.starting)) \
+            * self.step_time
+        self.stats.steps += 1
+        self.t += self.step_time
+
+    # ------------------------------------------------------------ metrics
+    def observed_rate(self, window_s: float = 60.0) -> float:
+        recent = [r for r in self.stats.latencies_ms]
+        return len(recent) / max(self.t, 1e-9)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.stats.latencies_ms)
+        return {
+            "served": self.stats.served,
+            "slo_violation_rate": (self.stats.slo_violations
+                                   / max(self.stats.served, 1)),
+            "cold_starts": self.stats.cold_starts,
+            "p50_ms": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            "p95_ms": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            "replica_seconds": self.stats.replica_seconds,
+            "queue_len": len(self.queue),
+        }

@@ -1,0 +1,81 @@
+"""AdamW in pure JAX (no optax), mixed-precision layout:
+
+* model params stored/computed in bf16,
+* f32 master weights + f32 first/second moments in the optimizer state
+  (sharded identically to the params — ZeRO-style when params are
+  FSDP-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    master: Any   # f32 master weights
+    m: Any        # f32 first moment
+    v: Any        # f32 second moment
+
+
+def init(params) -> OptState:
+    return OptState(
+        step=jnp.int32(0),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def apply(grads, params, opt: OptState, cfg: AdamWConfig):
+    """Full AdamW step. Returns (new_params (model dtype), new_opt, gnorm)."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = opt.step + 1
+    lr = _schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_ma = jax.tree.leaves(opt.master)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+
+    new_p, new_ma, new_m, new_v = [], [], [], []
+    for g, p, ma, m, v in zip(flat_g, flat_p, flat_ma, flat_m, flat_v):
+        g = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        ma1 = ma - lr * ((m1 / bc1) / (jnp.sqrt(v1 / bc2) + cfg.eps)
+                         + cfg.weight_decay * ma)
+        new_p.append(ma1.astype(p.dtype))
+        new_ma.append(ma1)
+        new_m.append(m1)
+        new_v.append(v1)
+
+    return (treedef.unflatten(new_p),
+            OptState(step, treedef.unflatten(new_ma),
+                     treedef.unflatten(new_m), treedef.unflatten(new_v)),
+            gnorm)

@@ -1,0 +1,103 @@
+"""Feature-extraction correctness vs scipy + invariance properties."""
+import numpy as np
+import pytest
+import scipy.stats
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import features as F
+
+
+def _windows(n=16, w=60, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.gamma(2.0, 10.0, size=(n, w)).astype(np.float32)
+
+
+def test_feature_count_and_names():
+    assert F.N_FEATURES == 38
+    assert len(F.FEATURE_NAMES) == 38
+    x = jnp.asarray(_windows())
+    out = F.extract_features(x)
+    assert out.shape == (16, 38)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_moments_match_scipy():
+    w = _windows()
+    feats = np.asarray(F.stat_time_features(jnp.asarray(w)))
+    idx = {n: i for i, n in enumerate(F.STAT_TIME_NAMES)}
+    np.testing.assert_allclose(feats[:, idx["mean"]], w.mean(1), rtol=1e-5)
+    np.testing.assert_allclose(feats[:, idx["std"]], w.std(1), rtol=1e-4)
+    np.testing.assert_allclose(
+        feats[:, idx["skewness"]], scipy.stats.skew(w, axis=1),
+        rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        feats[:, idx["kurtosis"]], scipy.stats.kurtosis(w, axis=1),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_quantiles_match_numpy():
+    w = _windows()
+    feats = np.asarray(F.stat_time_features(jnp.asarray(w)))
+    idx = {n: i for i, n in enumerate(F.STAT_TIME_NAMES)}
+    np.testing.assert_allclose(feats[:, idx["median"]],
+                               np.quantile(w, 0.5, axis=1), rtol=1e-5)
+    np.testing.assert_allclose(feats[:, idx["q25"]],
+                               np.quantile(w, 0.25, axis=1), rtol=1e-4)
+    np.testing.assert_allclose(feats[:, idx["q75"]],
+                               np.quantile(w, 0.75, axis=1), rtol=1e-4)
+
+
+def test_trend_slope_on_pure_ramp():
+    t = np.arange(60, dtype=np.float32)
+    w = (10.0 + 2.0 * t)[None, :]
+    feats = np.asarray(F.stat_time_features(jnp.asarray(w)))
+    idx = {n: i for i, n in enumerate(F.STAT_TIME_NAMES)}
+    # slope normalized by mean: 2 / mean(10 + 2t)
+    assert feats[0, idx["trend_slope"]] == pytest.approx(
+        2.0 / w.mean(), rel=1e-3)
+    assert feats[0, idx["trend_r2"]] == pytest.approx(1.0, abs=1e-3)
+
+
+def test_periodic_window_has_low_spectral_entropy():
+    t = np.arange(60)
+    periodic = 100 + 80 * np.sin(2 * np.pi * t / 10.0)
+    noise = np.random.default_rng(0).normal(100, 5, 60)
+    fp = np.asarray(F.freq_features(jnp.asarray(periodic[None])))
+    fn_ = np.asarray(F.freq_features(jnp.asarray(noise[None])))
+    names = {n: i for i, n in enumerate(F.FREQ_NAMES)}
+    assert fp[0, names["spectral_entropy"]] < 0.35
+    assert fn_[0, names["spectral_entropy"]] > 0.7
+    assert fp[0, names["dominant_power_ratio"]] > 0.8
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=1.5, max_value=100.0),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_scale_invariant_features(scale, seed):
+    """cv, acf, entropy, trend_r2 etc. are invariant to rate scaling."""
+    rng = np.random.default_rng(seed)
+    w = rng.gamma(2.0, 10.0, size=(1, 60)).astype(np.float32) + 1.0
+    f1 = np.asarray(F.extract_features(jnp.asarray(w)))
+    f2 = np.asarray(F.extract_features(jnp.asarray(w * scale)))
+    idx = {n: i for i, n in enumerate(F.FEATURE_NAMES)}
+    for name in ["cv", "skewness", "kurtosis", "acf_1", "acf_max",
+                 "trend_r2", "spectral_entropy", "half_ratio"]:
+        assert f1[0, idx[name]] == pytest.approx(
+            f2[0, idx[name]], rel=2e-2, abs=2e-2), name
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_features_always_finite(seed):
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        w = np.zeros((1, 60), np.float32)           # all-zero window
+    elif kind == 1:
+        w = rng.poisson(0.05, (1, 60)).astype(np.float32)  # sparse
+    else:
+        w = rng.gamma(1.0, 1e5, (1, 60)).astype(np.float32)  # huge
+    out = np.asarray(F.extract_features(jnp.asarray(w)))
+    assert np.all(np.isfinite(out))

@@ -1,0 +1,65 @@
+"""JAX histogram-GBDT classifier."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gbdt
+
+
+@pytest.fixture(scope="module")
+def trained():
+    rng = np.random.default_rng(0)
+    N = 4000
+    X = rng.normal(size=(N, 6)).astype(np.float32)
+    y = ((X[:, 0] > 0).astype(int) * 2 + (X[:, 1] * X[:, 2] > 0)).astype(
+        np.int32)  # 4 classes, nonlinear
+    cfg = gbdt.GBDTConfig(n_rounds=30, depth=4)
+    params = gbdt.fit(X, y, cfg)
+    return X, y, params
+
+
+def test_learns_nonlinear_4class(trained):
+    X, y, params = trained
+    acc = float((np.asarray(gbdt.predict(params, jnp.asarray(X))) == y
+                 ).mean())
+    assert acc > 0.93
+
+
+def test_proba_normalized(trained):
+    X, _, params = trained
+    proba = np.asarray(gbdt.predict_proba(params, jnp.asarray(X[:100])))
+    np.testing.assert_allclose(proba.sum(1), 1.0, rtol=1e-5)
+    assert proba.min() >= 0.0
+
+
+def test_save_load_roundtrip(tmp_path, trained):
+    X, _, params = trained
+    path = str(tmp_path / "model.npz")
+    gbdt.save(params, path)
+    loaded = gbdt.load(path)
+    a = np.asarray(gbdt.predict_logits(params, jnp.asarray(X[:50])))
+    b = np.asarray(gbdt.predict_logits(loaded, jnp.asarray(X[:50])))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_class_weights_help_rare_class():
+    rng = np.random.default_rng(1)
+    N = 6000
+    X = rng.normal(size=(N, 4)).astype(np.float32)
+    y = np.zeros(N, np.int32)
+    rare = rng.choice(N, size=60, replace=False)     # 1% rare class
+    y[rare] = 1
+    X[rare, 0] += 3.0
+    cfg = gbdt.GBDTConfig(n_classes=2, n_rounds=20, class_weighted=True)
+    params = gbdt.fit(X, y, cfg)
+    pred = np.asarray(gbdt.predict(params, jnp.asarray(X)))
+    recall = (pred[rare] == 1).mean()
+    assert recall > 0.8
+
+
+def test_binning_monotonic():
+    X = np.linspace(0, 1, 1000)[:, None].astype(np.float32)
+    edges = gbdt.compute_bin_edges(X, 64)
+    b = np.asarray(gbdt.bin_features(jnp.asarray(X), jnp.asarray(edges)))
+    assert (np.diff(b[:, 0]) >= 0).all()
+    assert b.min() >= 0 and b.max() <= 63

@@ -1,0 +1,63 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 256, 300])
+@pytest.mark.parametrize("w", [60, 48, 64])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_window_features_sweep(n, w, dtype):
+    rng = np.random.default_rng(n * 100 + w)
+    x = rng.gamma(2.0, 10.0, size=(n, w)).astype(dtype)
+    if n > 3:
+        x[3, :] = 0.0                    # all-zero window
+        x[2, w // 2] = 1e5               # spike
+    got = np.asarray(ops.window_features(jnp.asarray(x), interpret=True))
+    want = np.asarray(ref.window_features_ref(jnp.asarray(
+        x.astype(np.float32))))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("tile_n", [32, 128])
+def test_window_features_tile_invariance(tile_n):
+    rng = np.random.default_rng(0)
+    x = rng.gamma(2.0, 10.0, size=(100, 60)).astype(np.float32)
+    a = np.asarray(ops.window_features(jnp.asarray(x), tile_n=tile_n,
+                                       interpret=True))
+    b = np.asarray(ops.window_features(jnp.asarray(x), tile_n=256,
+                                       interpret=True))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_fused_features_match_reference_pipeline():
+    from repro.core.features import extract_features
+    rng = np.random.default_rng(1)
+    x = rng.gamma(2.0, 20.0, size=(64, 60)).astype(np.float32)
+    got = np.asarray(ops.extract_features_fused(jnp.asarray(x),
+                                                interpret=True))
+    want = np.asarray(extract_features(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("b", [1, 5, 8, 17])
+@pytest.mark.parametrize("t", [60, 500, 1440])
+@pytest.mark.parametrize("period", [24, 60])
+def test_holt_winters_sweep(b, t, period):
+    rng = np.random.default_rng(b * 1000 + t)
+    y = rng.gamma(2.0, 5.0, size=(b, t)).astype(np.float32)
+    got = np.asarray(ops.holt_winters(jnp.asarray(y), period=period,
+                                      interpret=True))
+    want = np.asarray(ref.holt_winters_ref(jnp.asarray(y), period=period))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_holt_winters_dtype_f64_input():
+    rng = np.random.default_rng(9)
+    y = rng.gamma(2.0, 5.0, size=(3, 200))
+    got = np.asarray(ops.holt_winters(jnp.asarray(y), interpret=True))
+    want = np.asarray(ref.holt_winters_ref(
+        jnp.asarray(y.astype(np.float32))))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

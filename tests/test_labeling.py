@@ -1,0 +1,64 @@
+"""Weak-supervision labeling functions + majority vote."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import features as F
+from repro.core import labeling as L
+from repro.core.archetypes import Archetype
+
+
+def _feats(w):
+    return F.extract_features(jnp.asarray(np.asarray(w, np.float32)))
+
+
+def test_spike_window_labels_spike():
+    w = np.full((1, 60), 5.0)
+    w[0, 30:33] = [500.0, 300.0, 150.0]
+    labels, conf, n = L.weak_label(_feats(w))
+    assert int(labels[0]) == Archetype.SPIKE
+    assert float(conf[0]) > 0.5
+
+
+def test_periodic_window_labels_periodic():
+    t = np.arange(60)
+    w = (100 + 80 * np.sin(2 * np.pi * t / 12.0))[None]
+    labels, conf, n = L.weak_label(_feats(w))
+    assert int(labels[0]) == Archetype.PERIODIC
+
+
+def test_ramp_window_labels_ramp():
+    t = np.arange(60, dtype=np.float64)
+    w = (50 + 40 * t)[None]
+    labels, conf, n = L.weak_label(_feats(w))
+    assert int(labels[0]) == Archetype.RAMP
+
+
+def test_stationary_window_labels_stationary():
+    rng = np.random.default_rng(3)
+    w = rng.normal(1000, 30, (1, 60))
+    labels, conf, n = L.weak_label(_feats(w))
+    assert int(labels[0]) == Archetype.STATIONARY_NOISY
+
+
+def test_vote_abstain_when_no_lf_fires():
+    votes = jnp.full((4, L.N_LFS), L.ABSTAIN, jnp.int32)
+    labels, conf, n = L.majority_vote(votes)
+    assert np.all(np.asarray(labels) == L.ABSTAIN)
+    assert np.all(np.asarray(conf) == 0.0)
+    assert np.all(np.asarray(n) == 0)
+
+
+def test_vote_confidence_is_agreement_fraction():
+    votes = jnp.asarray([[1, 1, 1, 0, -1, -1, -1, -1, -1, -1]], jnp.int32)
+    labels, conf, n = L.majority_vote(votes)
+    assert int(labels[0]) == 1
+    assert float(conf[0]) == 0.75  # 3 of 4 non-abstaining agree
+    assert int(n[0]) == 4
+
+
+def test_lf_outputs_in_range():
+    rng = np.random.default_rng(0)
+    w = rng.gamma(2.0, 20.0, size=(64, 60))
+    votes = np.asarray(L.apply_lfs(_feats(w)))
+    assert votes.shape == (64, L.N_LFS)
+    assert set(np.unique(votes)) <= {-1, 0, 1, 2, 3}

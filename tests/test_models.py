@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step + prefill/decode, asserting output shapes and no NaNs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import model as M
+
+B, S = 2, 32
+
+
+def _batch(cfg, with_labels=True):
+    n_text = S - (cfg.n_img_tokens or 0)
+    batch = {"tokens": jnp.ones((B, n_text), jnp.int32)}
+    if with_labels:
+        batch["labels"] = jnp.ones((B, n_text), jnp.int32)
+    if cfg.n_img_tokens:
+        batch["img_embeds"] = jnp.zeros((B, cfg.n_img_tokens, cfg.d_model),
+                                        cfg.jdtype)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.zeros((B, cfg.enc_len, cfg.d_model),
+                                        cfg.jdtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_decode(arch):
+    cfg = smoke_config(get_config(arch))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    n_text = S - (cfg.n_img_tokens or 0)
+
+    loss, parts = M.loss_fn(params, _batch(cfg), cfg)
+    assert np.isfinite(float(loss))
+    logits, aux = M.forward(params, _batch(cfg), cfg)
+    assert logits.shape == (B, n_text, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    lg, cache = M.prefill(params, _batch(cfg, with_labels=False), cfg,
+                          max_len=64)
+    assert lg.shape == (B, 1, cfg.vocab)
+    pos = jnp.int32(n_text + (cfg.n_img_tokens or 0))
+    lg2, cache = M.decode_step(params, cache,
+                               jnp.ones((B, 1), jnp.int32), pos, cfg)
+    assert lg2.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(lg2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "mamba2_2_7b",
+                                  "zamba2_2_7b"])
+def test_prefill_decode_consistency(arch):
+    """Decoding token-by-token equals prefill at the same positions."""
+    cfg = smoke_config(get_config(arch))
+    params = M.init(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
+
+    logits_full, _ = M.forward(params, {"tokens": toks}, cfg, remat=False)
+
+    lg, cache = M.prefill(params, {"tokens": toks[:, :4]}, cfg, max_len=16)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(logits_full[:, 3], np.float32), rtol=0.05, atol=0.05)
+    for t in range(4, 8):
+        lg, cache = M.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(logits_full[:, t], np.float32), rtol=0.05,
+            atol=0.05)
+
+
+def test_param_counts_match_configs():
+    """Full configs' parameter counts are near their nominal sizes."""
+    expect = {"stablelm_1_6b": 1.6e9, "deepseek_67b": 67e9,
+              "mistral_nemo_12b": 12e9, "internlm2_1_8b": 1.8e9,
+              "mamba2_2_7b": 2.7e9, "deepseek_v2_lite_16b": 16e9,
+              "qwen3_moe_30b_a3b": 30e9}
+    for arch, nominal in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.55 * nominal < n < 1.55 * nominal, (arch, n, nominal)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("qwen3_moe_30b_a3b")
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()

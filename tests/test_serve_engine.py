@@ -1,0 +1,72 @@
+"""Serving engine behaviour (continuous batching + scaling control)."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.models import model as M
+from repro.serve.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    cfg = smoke_config(get_config("internlm2_1_8b"))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk(cfg, params, **kw):
+    defaults = dict(lanes_per_replica=2, max_replicas=4,
+                    step_time_s=0.05, startup_s=0.2, slo_s=1.0)
+    defaults.update(kw)
+    return ServingEngine(cfg, params, **defaults)
+
+
+def test_requests_complete(engine_parts):
+    cfg, params = engine_parts
+    eng = _mk(cfg, params)
+    for i in range(6):
+        eng.submit(Request(i, 0.0, prompt_len=2, gen_len=3))
+    for _ in range(40):
+        eng.step()
+    s = eng.summary()
+    assert s["served"] == 6
+    assert s["queue_len"] == 0
+    assert s["p95_ms"] > 0
+
+
+def test_scale_up_respects_startup_delay(engine_parts):
+    cfg, params = engine_parts
+    eng = _mk(cfg, params, startup_s=0.5)
+    eng.scale_to(3)
+    assert eng.ready_replicas == 1 and len(eng.starting) == 2
+    for _ in range(4):       # 0.2 s < startup
+        eng.step()
+    assert eng.ready_replicas == 1
+    for _ in range(10):      # past startup
+        eng.step()
+    assert eng.ready_replicas == 3
+
+
+def test_scale_down_cancels_starting_first(engine_parts):
+    cfg, params = engine_parts
+    eng = _mk(cfg, params, startup_s=10.0)
+    eng.scale_to(4)
+    assert len(eng.starting) == 3
+    eng.scale_to(2)
+    assert len(eng.starting) == 1 and eng.ready_replicas == 1
+
+
+def test_more_replicas_more_throughput(engine_parts):
+    cfg, params = engine_parts
+    done = {}
+    for n in (1, 4):
+        eng = _mk(cfg, params, startup_s=0.0)
+        eng.scale_to(n)
+        eng.step()
+        for i in range(16):
+            eng.submit(Request(i, 0.0, prompt_len=2, gen_len=4))
+        for _ in range(10):
+            eng.step()
+        done[n] = eng.summary()["served"]
+    assert done[4] > done[1]

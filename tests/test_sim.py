@@ -1,0 +1,127 @@
+"""Cluster simulator invariants + controller behaviour."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controllers import (aapa_controller, hpa_controller,
+                                    predictive_controller)
+from repro.sim import metrics as M
+from repro.sim.cluster import SimConfig, make_simulator, simulate
+
+CFG = SimConfig()
+
+
+def _run(rates, ctrl=None, cfg=CFG):
+    ctrl = ctrl or hpa_controller(cfg)
+    out = simulate(jnp.asarray(rates, jnp.float32), ctrl, cfg)
+    return jax.tree.map(np.asarray, out)
+
+
+def test_conservation_served_never_exceeds_arrivals():
+    rng = np.random.default_rng(0)
+    rates = rng.poisson(600, 180).astype(np.float32)  # 3 busy hours
+    out = _run(rates)
+    total_arrived = rates.sum()
+    served = out.served.sum()
+    assert served <= total_arrived + 1e-3
+    # whatever wasn't served must still be queued
+    assert served + out.queue_end[-1] == pytest.approx(total_arrived,
+                                                       rel=1e-5)
+
+
+def test_replica_bounds_respected():
+    rates = np.full(120, 1e9, np.float32)  # absurd overload
+    out = _run(rates)
+    assert out.ready_mean.max() <= CFG.max_replicas + 1e-2  # float accum
+
+
+def test_idle_trace_scales_to_zero_and_cold_starts():
+    rates = np.zeros(240, np.float32)
+    rates[200] = 60.0  # burst after a long idle stretch
+    out = _run(rates)
+    assert out.ready_mean[150] == pytest.approx(0.0, abs=1e-6)  # idle->0
+    assert out.cold_starts.sum() > 0                    # burst cold-starts
+    assert out.served.sum() == pytest.approx(60.0, rel=1e-3)  # eventually
+    assert out.violated[200:].sum() > 0                 # and they violated
+
+
+def test_hpa_scales_up_under_load():
+    rates = np.concatenate([np.full(30, 600.0),
+                            np.full(90, 18000.0)]).astype(np.float32)
+    out = _run(rates)
+    # 18000/min = 300 rps needs 15 replicas at 100% (more at 70% target)
+    assert out.ready_mean[-1] > 14
+
+
+def test_aapa_spike_policy_keeps_warm_pool():
+    cfg = CFG
+
+    def classify(feats):
+        return jnp.int32(1), jnp.float32(1.0)  # SPIKE, certain
+
+    rates = np.full(120, 1.0, np.float32)      # nearly idle
+    out = _run(rates, aapa_controller(cfg, classify))
+    # Table III: SPIKE min replicas 2 + warm pool 2 -> never below ~4
+    assert out.ready_mean[60:].min() >= 3.0
+    assert out.cold_starts.sum() == 0.0
+
+
+def test_aapa_uncertainty_increases_replicas():
+    cfg = CFG
+    rates = np.full(120, 1.0, np.float32)
+
+    def certain(feats):
+        return jnp.int32(1), jnp.float32(1.0)
+
+    def uncertain(feats):
+        return jnp.int32(1), jnp.float32(0.0)
+
+    r_cert = _run(rates, aapa_controller(cfg, certain))
+    r_unc = _run(rates, aapa_controller(cfg, uncertain))
+    assert r_unc.replica_seconds.sum() > r_cert.replica_seconds.sum()
+
+
+def test_predictive_prescales_on_periodic():
+    t = np.arange(240)
+    rates = (6000 + 5500 * np.sin(2 * np.pi * t / 60.0)).astype(np.float32)
+    hpa = M.aggregate(_run(rates))
+    pred = M.aggregate(_run(rates, predictive_controller(CFG)))
+    # predictive should violate less on a clean periodic signal
+    assert pred.slo_violation_rate <= hpa.slo_violation_rate + 1e-9
+
+
+def test_vmapped_simulator_matches_single():
+    rng = np.random.default_rng(1)
+    rates = rng.poisson(1200, size=(3, 120)).astype(np.float32)
+    ctrl = hpa_controller(CFG)
+    sim = make_simulator(ctrl, CFG)
+    batched = jax.tree.map(np.asarray, sim(jnp.asarray(rates)))
+    single = _run(rates[1], ctrl)
+    np.testing.assert_allclose(batched.served[1], single.served, rtol=1e-5)
+    np.testing.assert_allclose(batched.ready_mean[1], single.ready_mean,
+                               rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_sim_state_never_negative(seed):
+    rng = np.random.default_rng(seed)
+    rates = rng.poisson(rng.uniform(1, 5000), 90).astype(np.float32)
+    out = _run(rates)
+    assert (out.queue_end >= -1e-5).all()
+    assert (out.ready_mean >= -1e-6).all()
+    assert (out.served >= 0).all()
+    assert np.isfinite(out.resp_sum).all()
+
+
+def test_metrics_aggregation():
+    rng = np.random.default_rng(2)
+    rates = rng.poisson(3000, 240).astype(np.float32)
+    out = _run(rates)
+    m = M.aggregate(out)
+    assert 0.0 <= m.slo_violation_rate <= 1.0
+    assert m.replica_minutes > 0
+    assert m.p99_response_ms >= m.p95_response_ms >= 0
+    assert m.total_requests == pytest.approx(out.served.sum())

@@ -1,0 +1,69 @@
+"""End-to-end behaviour: traces -> weak labels -> classifier -> calibrated
+confidence -> archetype-aware autoscaling, on a miniature dataset."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gbdt, pipeline
+from repro.core.controllers import aapa_controller, hpa_controller
+from repro.data import windows as W
+from repro.data.azure_synth import generate_traces
+from repro.sim import metrics as MM
+from repro.sim.cluster import SimConfig, make_simulator
+
+
+@pytest.fixture(scope="module")
+def mini():
+    traces = generate_traces(n_functions=24, n_days=4, seed=7)
+    trained = pipeline.train_aapa(
+        traces, gbdt.GBDTConfig(n_rounds=15, depth=3))
+    return traces, trained
+
+
+def test_windows_and_splits():
+    traces = generate_traces(n_functions=6, n_days=14, seed=0)
+    ds = W.make_windows(traces)
+    assert ds.windows.shape[1] == 60
+    split = W.day_split(ds)
+    n = sum(m.sum() for m in split.values())
+    assert n == len(ds)  # partitions cover everything
+    assert split["train"].sum() > split["val"].sum()
+    # no window leaks across split days
+    d = ds.day()
+    assert d[split["train"]].max() <= 9
+    assert d[split["test"]].min() >= 12
+
+
+def test_classifier_accuracy_on_weak_labels(mini):
+    _, trained = mini
+    # paper: 99.8% — mini dataset should still be >97%
+    assert trained.test_acc > 0.97
+    assert trained.n_windows > 1000
+    assert abs(trained.label_dist.sum() - 1.0) < 1e-6
+
+
+def test_aapa_beats_hpa_on_violations(mini):
+    traces, trained = mini
+    cfg = SimConfig()
+    classify = trained.make_classify()
+    rates = jnp.asarray(traces.counts[:12, :1440])
+
+    hpa_out = make_simulator(hpa_controller(cfg), cfg)(rates)
+    aapa_out = make_simulator(aapa_controller(cfg, classify), cfg)(rates)
+    hpa_m = MM.aggregate(hpa_out, workload_axis=True)
+    aapa_m = MM.aggregate(aapa_out, workload_axis=True)
+
+    # the paper's central claims, directionally: fewer violations and
+    # fewer cold starts, at higher resource cost
+    assert aapa_m.slo_violation_rate <= hpa_m.slo_violation_rate
+    assert aapa_m.cold_start_rate <= hpa_m.cold_start_rate
+    assert aapa_m.replica_minutes > hpa_m.replica_minutes
+
+
+def test_classify_closure_jits(mini):
+    _, trained = mini
+    classify = trained.make_classify()
+    feats = jnp.zeros((38,), jnp.float32)
+    arch, conf = jax.jit(classify)(feats)
+    assert arch.shape == () and 0.0 <= float(conf) <= 1.0

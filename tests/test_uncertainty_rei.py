@@ -1,0 +1,56 @@
+"""Algorithm 1 (uncertainty-aware adjustment) + REI metric."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rei as R
+from repro.core import uncertainty as U
+
+
+def test_algorithm1_exact_at_full_confidence():
+    adj = U.adjust(1.0, jnp.float32(0.6), jnp.float32(7.0), jnp.float32(1))
+    assert float(adj.target_cpu) == pytest.approx(0.6)
+    assert float(adj.cooldown_min) == pytest.approx(7.0)
+    assert float(adj.min_replicas) == 1.0
+
+
+def test_algorithm1_paper_example():
+    # c = 0.5: m = 1.25, cpu = 0.6*(1-0.1)=0.54, cool = 8.75, rep = ceil(2.5)
+    adj = U.adjust(0.5, jnp.float32(0.6), jnp.float32(7.0), jnp.float32(2))
+    assert float(adj.target_cpu) == pytest.approx(0.54)
+    assert float(adj.cooldown_min) == pytest.approx(8.75)
+    assert float(adj.min_replicas) == 3.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_lower_confidence_is_more_conservative(c1, c2):
+    lo, hi = min(c1, c2), max(c1, c2)
+    a_lo = U.adjust(lo, jnp.float32(0.6), jnp.float32(7.0), jnp.float32(2))
+    a_hi = U.adjust(hi, jnp.float32(0.6), jnp.float32(7.0), jnp.float32(2))
+    assert float(a_lo.target_cpu) <= float(a_hi.target_cpu) + 1e-6
+    assert float(a_lo.cooldown_min) >= float(a_hi.cooldown_min) - 1e-6
+    assert float(a_lo.min_replicas) >= float(a_hi.min_replicas)
+
+
+def test_rei_formula():
+    b = R.rei(violation_rate=0.1, pod_minutes=2880.0, scaling_actions=20.0)
+    assert b.s_slo == pytest.approx(0.9)
+    assert b.s_eff == pytest.approx(0.5)    # 2880/1440 = 2 -> 1/2
+    assert b.s_stab == pytest.approx(0.5)   # 20/10 -> 1/2
+    assert b.rei == pytest.approx(0.5 * 0.9 + 0.3 * 0.5 + 0.2 * 0.5)
+
+
+def test_rei_bounded():
+    b = R.rei(0.0, 1.0, 0.0)
+    assert 0.0 <= b.rei <= 1.0
+    b2 = R.rei(1.0, 1e9, 1e9)
+    assert b2.rei == pytest.approx(0.0, abs=1e-6)
+
+
+def test_rei_sensitivity_small():
+    outs = R.sensitivity(0.05, 2000, 15)
+    reis = [o.rei for o in outs]
+    base = R.rei(0.05, 2000, 15).rei
+    assert max(abs(r - base) for r in reis) < 0.1

@@ -1,0 +1,122 @@
+"""Render §Dry-run-summary / §Roofline-summary / §Perf-hillclimb markdown
+tables from the experiment JSONs and append them to EXPERIMENTS.md
+(replacing everything after the AUTOGEN marker)."""
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+MARKER = "<!-- AUTOGEN SECTIONS BELOW: dryrun-summary / roofline-summary / hillclimb -->"
+
+
+def load(p):
+    p = ROOT / p
+    return json.loads(p.read_text()) if p.exists() else {}
+
+
+def dryrun_table():
+    r = load("experiments/dryrun/results.json")
+    lines = [
+        "\n## §Dry-run-summary (final sweep)\n",
+        f"{sum(1 for v in r.values() if v.get('ok'))}/{len(r)} cells "
+        "compiled (32 live cells x single-pod 16x16 + multi-pod 2x16x16).\n",
+        "Per-device memory (argument + temp bytes from "
+        "`compiled.memory_analysis()`; decode outputs alias donated "
+        "caches), single-pod mesh:\n",
+        "| arch | shape | compile s | args GB | temp GB | total GB | coll GB (scanned artifact) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(r):
+        v = r[k]
+        if not v.get("ok") or k.endswith("|multi"):
+            continue
+        m = v["memory"]
+        a = m["argument_bytes"] / 1e9
+        t = m["temp_bytes"] / 1e9
+        tot = a + t
+        flag = " **(over)**" if tot > 16 else ""
+        lines.append(
+            f"| {v['arch']} | {v['shape']} | {v['compile_s']:.0f} "
+            f"| {a:.2f} | {t:.2f} | {tot:.2f}{flag} "
+            f"| {v['collectives']['total_bytes']/1e9:.2f} |")
+    multi_ok = sum(1 for k, v in r.items()
+                   if k.endswith("|multi") and v.get("ok"))
+    lines.append(f"\nMulti-pod (2x16x16) pass: {multi_ok}/32 cells compile "
+                 "— the \"pod\" axis shards (FSDP over (pod,data)); table in "
+                 "results.json.")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    r = load("experiments/roofline/results.json")
+    lines = [
+        "\n## §Roofline-summary (single-pod, unrolled probes)\n",
+        "Terms in seconds/step-equivalent per §Roofline methodology. "
+        "`useful` = MODEL_FLOPS / HLO_FLOPs (NB: excludes attention "
+        "FLOPs by convention, so long-KV decode is legitimately small); "
+        "`frac` = compute_s / max(terms). The memory term uses XLA "
+        "`bytes accessed` (pre-fusion operand bytes) — an upper bound on "
+        "HBM traffic; on-chip fusion lowers real traffic, so `frac` here "
+        "is conservative.\n",
+        "| arch | shape | compute_s | memory_s | coll_s | dominant | useful | frac | one-line lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    LEVERS = {
+        "train": "fuse/stream optimizer + larger per-device batch to raise arithmetic intensity",
+        "prefill": "wider q/kv tiles + fp8 KV writes to cut cache-write bytes",
+        "decode": "fp8 KV cache halves cache reads (see hillclimb); batch more sequences per chip",
+    }
+    for k in sorted(r):
+        v = r[k]
+        if "error" in v:
+            lines.append(f"| {k.split('|')[0]} | {k.split('|')[1]} | - | - | - | ERROR | - | - | {v['error'][:40]} |")
+            continue
+        kind = ("decode" if "decode" in v["shape"] or "long" in v["shape"]
+                else ("prefill" if "prefill" in v["shape"] else "train"))
+        lines.append(
+            f"| {v['arch']} | {v['shape']} | {v['compute_s']:.2e} "
+            f"| {v['memory_s']:.2e} | {v['collective_s']:.2e} "
+            f"| {v['dominant']} | {v['useful_flop_ratio']:.2f} "
+            f"| {v['roofline_fraction']:.3f} | {LEVERS[kind]} |")
+    return "\n".join(lines)
+
+
+def hillclimb_table():
+    r = load("experiments/hillclimb/results.json")
+    lines = [
+        "\n## §Perf-hillclimb (three cells, baseline vs variant)\n",
+        "| cell | variant | compute_s | memory_s | coll_s | dominant-term delta |",
+        "|---|---|---|---|---|---|",
+    ]
+    pairs = {}
+    for k, v in r.items():
+        arch, shape, tag = k.split("|")
+        pairs.setdefault((arch, shape), {})[tag] = v
+    for (arch, shape), d in sorted(pairs.items()):
+        base = d.get("baseline")
+        for tag, v in d.items():
+            if "error" in v:
+                lines.append(f"| {arch} {shape} | {tag} | - | - | - | ERROR {v['error'][:40]} |")
+                continue
+            delta = ""
+            if tag != "baseline" and base and "error" not in base:
+                dom = base["dominant"] + "_s"
+                delta = (f"{base[dom]:.2e} -> {v[dom]:.2e} "
+                         f"({(v[dom]/base[dom]-1)*100:+.0f}%)")
+            lines.append(
+                f"| {arch} {shape} | {tag} | {v['compute_s']:.2e} "
+                f"| {v['memory_s']:.2e} | {v['collective_s']:.2e} "
+                f"| {delta} |")
+    return "\n".join(lines)
+
+
+def main():
+    p = ROOT / "EXPERIMENTS.md"
+    text = p.read_text()
+    head = text.split(MARKER)[0] + MARKER + "\n"
+    p.write_text(head + dryrun_table() + "\n" + roofline_table() + "\n"
+                 + hillclimb_table() + "\n")
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
