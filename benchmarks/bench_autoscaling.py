@@ -1,7 +1,12 @@
 """Paper §V.B (Fig 2) + the resource-utilization table: per-archetype SLO
 violations, response times, cold starts, and replica-minute ratios for
 HPA / Generic-Predictive / AAPA, averaged over 5 seeds with 95% CIs
-(paper §IV.E: 5 trials)."""
+(paper §IV.E: 5 trials).
+
+Policies resolve through ``repro.scaling.registry`` and ALL of them run
+in one jitted policies x workloads simulation
+(``repro.scaling.batch.make_batch_simulator``) — one compile, one
+dispatch per seed, instead of a per-policy ``make_simulator`` loop."""
 from __future__ import annotations
 
 import time
@@ -12,38 +17,35 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core.archetypes import ARCHETYPE_NAMES
-from repro.core.controllers import (aapa_controller, hpa_controller,
-                                    predictive_controller)
 from repro.data.azure_synth import generate_traces
+from repro.scaling import batch, registry
 from repro.sim import metrics as M
-from repro.sim.cluster import SimConfig, make_simulator
+from repro.sim.cluster import SimConfig
 
+POLICIES = ("hpa", "predictive", "aapa")
 N_PER_SEED = 32      # workloads per trial
 N_SEEDS = 5
 TEST_DAY = 12        # replay a held-out day (days 12-14 are test)
 
 
-def run_all(trained):
+def run_all(trained, policies=POLICIES):
     cfg = SimConfig()
     classify = trained.make_classify()
-    sims = {
-        "hpa": make_simulator(hpa_controller(cfg), cfg),
-        "predictive": make_simulator(predictive_controller(cfg), cfg),
-        "aapa": make_simulator(aapa_controller(cfg, classify), cfg),
-    }
-    rows = {k: {g: [] for g in range(4)} for k in sims}
+    ctrls = [registry.get_controller(name, cfg, classify=classify)
+             for name in policies]
+    sim = batch.make_batch_simulator(ctrls, cfg)   # ONE compiled scan
+    rows = {k: {g: [] for g in range(4)} for k in policies}
     t0 = time.time()
     total_days = 0
     for seed in range(N_SEEDS):
         traces = generate_traces(n_functions=N_PER_SEED, n_days=13,
                                  seed=1000 + seed)
         day = traces.counts[:, (TEST_DAY - 1) * 1440:TEST_DAY * 1440]
-        rates = jnp.asarray(day)
-        for name, sim in sims.items():
-            out = sim(rates)
-            jax.block_until_ready(out.served)
-            total_days += N_PER_SEED
-            per = M.per_workload(out)
+        out = sim(jnp.asarray(day))                # [P, W, M]
+        jax.block_until_ready(out.served)
+        total_days += N_PER_SEED * len(policies)
+        for p, name in enumerate(policies):
+            per = M.per_workload(jax.tree.map(lambda a: a[p], out))
             for i, met in enumerate(per):
                 rows[name][int(traces.pattern[i])].append(met)
     wall = time.time() - t0
@@ -104,7 +106,7 @@ def main():
     for gname, row in table.items():
         ratio = row.get("resource_ratio_aapa_vs_hpa", float("nan"))
         parts = []
-        for name in ("hpa", "predictive", "aapa"):
+        for name in POLICIES:
             if name in row:
                 v = row[name]["slo_violation_rate"][0]
                 parts.append(f"{name}={v:.4f}")

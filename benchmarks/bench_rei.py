@@ -1,38 +1,68 @@
 """Paper §III.D + §V.D: REI per autoscaler and the weight-sensitivity
-check (+-0.05 on alpha/beta/gamma changes rankings by <2%)."""
+check (+-0.05 on alpha/beta/gamma changes rankings by <2%).
+
+All policies in the registry are evaluated over a scenario suite from
+``repro.scaling.scenarios`` with ONE jitted policies x workloads
+simulation per scenario (``repro.scaling.batch``) — the REI / SLO
+trade-off table comes out of a single API instead of a per-policy
+``make_simulator`` loop."""
 from __future__ import annotations
 
-import json
-import pathlib
-
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import rei as R
+from repro.scaling import batch, registry, scenarios
+from repro.sim import metrics as M
+
+SCENARIOS = (
+    ("archetype_mix", dict(n_workloads=16, minutes=1440, seed=3)),
+    ("burst_storm", dict(n_workloads=8, minutes=720, seed=4)),
+    ("diurnal_ramp", dict(n_workloads=8, minutes=1440, seed=5)),
+)
+
+
+def run_suite(policies, classify):
+    """-> {policy: {scenario: aggregate metrics}}."""
+    per = {p: {} for p in policies}
+    for sc_name, kw in SCENARIOS:
+        sc = scenarios.get(sc_name, **kw)
+        ctrls = [registry.get_controller(p, sc.cfg, classify=classify)
+                 for p in policies]
+        sim = batch.make_batch_simulator(ctrls, sc.cfg)
+        out = sim(jnp.asarray(sc.rates))            # [P, W, M]
+        jax.block_until_ready(out.served)
+        n_w = sc.rates.shape[0]
+        for i, p in enumerate(policies):
+            agg = M.aggregate(jax.tree.map(lambda a: a[i], out),
+                              workload_axis=True)
+            per[p][sc.name] = {
+                "slo_violation_rate": agg.slo_violation_rate,
+                "replica_minutes": agg.replica_minutes / n_w,
+                "oscillations": agg.oscillations / n_w,
+            }
+    return per
+
+
+def _rei_inputs(per, policy):
+    rows = per[policy].values()
+    return (float(np.mean([r["slo_violation_rate"] for r in rows])),
+            float(np.mean([r["replica_minutes"] for r in rows])),
+            float(np.mean([r["oscillations"] for r in rows])) + 1.0)
 
 
 def main():
-    # reuse the per-archetype table produced by bench_autoscaling
-    src = common.BENCH_OUT / "autoscaling_fig2.json"
-    if not src.exists():
-        import benchmarks.bench_autoscaling as BA
-        BA.main()
-    data = json.loads(src.read_text())["per_archetype"]
+    trained = common.get_trained()
+    policies = registry.available()
+    per = run_suite(policies, trained.make_classify())
 
-    reis, rankings = {}, {}
-    for scaler in ("hpa", "predictive", "aapa"):
-        viols, reps, acts = [], [], []
-        for g, row in data.items():
-            if scaler not in row:
-                continue
-            viols.append(row[scaler]["slo_violation_rate"][0])
-            reps.append(row[scaler]["replica_minutes"][0])
-            acts.append(row[scaler]["oscillations"][0] + 1)
-        b = R.rei(float(np.mean(viols)), float(np.mean(reps)),
-                  float(np.mean(acts)))
-        reis[scaler] = {"rei": b.rei, "s_slo": b.s_slo, "s_eff": b.s_eff,
-                        "s_stab": b.s_stab}
-
+    reis = {}
+    for p in policies:
+        b = R.rei(*_rei_inputs(per, p))
+        reis[p] = {"rei": b.rei, "s_slo": b.s_slo, "s_eff": b.s_eff,
+                   "s_stab": b.s_stab}
     base_rank = sorted(reis, key=lambda k: -reis[k]["rei"])
 
     # sensitivity: perturb weights, count ranking flips
@@ -43,24 +73,16 @@ def main():
             w = [0.5, 0.3, 0.2]
             w[which] += d
             w[(which + 1) % 3] -= d
-            scores = {}
-            for scaler in reis:
-                viols = [data[g][scaler]["slo_violation_rate"][0]
-                         for g in data if scaler in data[g]]
-                reps = [data[g][scaler]["replica_minutes"][0]
-                        for g in data if scaler in data[g]]
-                acts = [data[g][scaler]["oscillations"][0] + 1
-                        for g in data if scaler in data[g]]
-                scores[scaler] = R.rei(float(np.mean(viols)),
-                                       float(np.mean(reps)),
-                                       float(np.mean(acts)),
-                                       weights=tuple(w)).rei
+            scores = {p: R.rei(*_rei_inputs(per, p),
+                               weights=tuple(w)).rei for p in policies}
             rank = sorted(scores, key=lambda k: -scores[k])
             trials += 1
             if rank != base_rank:
                 flips += 1
 
     payload = {"rei": reis, "ranking": base_rank,
+               "per_scenario": per,
+               "scenarios": [s for s, _ in SCENARIOS],
                "sensitivity_flips": flips, "sensitivity_trials": trials,
                "paper_claim": "rank changes < 2% under +-0.05"}
     common.emit("rei_metric", 0.0,

@@ -4,7 +4,6 @@ variant (c=1). The paper claims uncertainty-awareness prevents
 mis-scaling; we measure violations + oscillations on noisy workloads."""
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

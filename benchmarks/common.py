@@ -7,7 +7,6 @@ import pathlib
 import pickle
 import time
 
-import numpy as np
 
 from repro.core import gbdt, pipeline
 from repro.data.azure_synth import generate_traces

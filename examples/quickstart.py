@@ -8,14 +8,14 @@ HPA / Generic-Predictive / AAPA, and prints the paper's headline metrics
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import gbdt, pipeline, rei
-from repro.core.controllers import (aapa_controller, hpa_controller,
-                                    predictive_controller)
 from repro.data.azure_synth import generate_traces
+from repro.scaling import batch, registry
 from repro.sim import metrics as M
-from repro.sim.cluster import SimConfig, make_simulator
+from repro.sim.cluster import SimConfig
 
 
 def main():
@@ -27,19 +27,20 @@ def main():
           f"test_acc={trained.test_acc:.4f} (paper: 0.998)")
     print(f"   weak-label dist={np.round(trained.label_dist, 3)}")
 
-    print("== 2. replay one day under each autoscaler ==")
+    print("== 2. replay one day under every registered autoscaler ==")
     cfg = SimConfig()
     rates = jnp.asarray(traces.counts[:16, -1440:])
-    controllers = {
-        "hpa": hpa_controller(cfg),
-        "predictive": predictive_controller(cfg),
-        "aapa": aapa_controller(cfg, trained.make_classify()),
-    }
+    names = registry.available()
+    ctrls = [registry.get_controller(n, cfg,
+                                     classify=trained.make_classify())
+             for n in names]
+    # one jitted policies x workloads simulation for the whole table
+    out_all = batch.batch_simulate(ctrls, rates, cfg)
     print(f"   {'scaler':12s} {'viol%':>7s} {'cold%':>7s} "
           f"{'rep-min':>9s} {'p95 ms':>9s} {'REI':>6s}")
-    for name, ctrl in controllers.items():
-        out = make_simulator(ctrl, cfg)(rates)
-        m = M.aggregate(out, workload_axis=True)
+    for p, name in enumerate(names):
+        m = M.aggregate(jax.tree.map(lambda a: a[p], out_all),
+                        workload_axis=True)
         r = rei.rei(m.slo_violation_rate, m.replica_minutes / 16,
                     m.oscillations / 16 + 1)
         print(f"   {name:12s} {100*m.slo_violation_rate:7.3f} "

@@ -1,8 +1,8 @@
 """End-to-end serving driver (the paper's kind of system, applied to model
 endpoints): a reduced StableLM serves batched requests whose arrivals
-follow a bursty synthetic trace; AAPA classifies the live arrival window
-and scales replica lanes; we report latency/SLO/cost vs plain reactive
-scaling.
+follow a bursty synthetic trace; any `repro.scaling` policy scales the
+replica lanes through `repro.scaling.adapter` — the identical controller
+code that runs compiled inside the cluster simulator.
 
     PYTHONPATH=src python examples/serve_autoscale.py [--minutes 20]
 """
@@ -10,59 +10,46 @@ import argparse
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_config
 from repro.core import gbdt, pipeline
-from repro.core import features as F
-from repro.core.archetypes import ARCHETYPE_NAMES, table_iii_arrays
-from repro.core.uncertainty import adjust
-from repro.data.azure_synth import generate_traces
+from repro.core.archetypes import ARCHETYPE_NAMES
 from repro.models import model as M
+from repro.data.azure_synth import generate_traces
+from repro.scaling import adapter, registry
 from repro.serve.engine import Request, ServingEngine
+
+STEPS_PER_MIN = 20     # one simulated trace-minute = 1 s of engine time
+MINUTE_S = 1.0
 
 
 def run(minutes: int, policy: str, trained, params, cfg, rates,
         rng) -> dict:
     eng = ServingEngine(cfg, params, lanes_per_replica=4, max_replicas=8,
-                        step_time_s=0.05, startup_s=2.0, slo_s=1.5)
+                        step_time_s=MINUTE_S / STEPS_PER_MIN,
+                        startup_s=2.0, slo_s=1.5)
+    sim_cfg = adapter.sim_config_for_engine(eng, minute_s=MINUTE_S)
+    name = {"reactive": "hpa"}.get(policy, policy)
     classify = trained.make_classify() if trained else None
-    tab = table_iii_arrays()
+    ctrl = registry.get_controller(name, sim_cfg, classify=classify)
+    auto = adapter.EngineAutoscaler(eng, ctrl, sim_cfg, minute_s=MINUTE_S)
+
     rid = 0
-    history = np.zeros(60, np.float32)
-    steps_per_min = int(60 / eng.step_time) // 60  # sim-minute = 1s wall
-
     for minute in range(minutes):
-        history = np.roll(history, -1)
-        history[-1] = rates[minute]
-        # --- control plane ---
-        rate_per_s = rates[minute] / 60.0
-        need = rate_per_s * 0.4 / eng.lanes  # ~0.4 s service per request
-        if policy == "aapa":
-            feats = F.extract_features(jnp.asarray(history)[None])[0]
-            arch, conf = classify(feats)
-            a = int(arch)
-            adj = adjust(conf, tab["target_cpu"][a],
-                         tab["cooldown_min"][a], tab["min_replicas"][a])
-            warm = float(tab["warm_pool"][a])
-            desired = max(np.ceil(need / float(adj.target_cpu)),
-                          float(adj.min_replicas) + warm)
-            label = ARCHETYPE_NAMES[a]
-        else:
-            desired = max(np.ceil(need / 0.7), 1)
-            label = "-"
-        eng.scale_to(int(desired))
-
-        # --- data plane: one simulated minute = 20 engine steps ---
-        n_req = int(rng.poisson(rates[minute] / 60.0 * 1.0))
-        for _ in range(20):
-            for _ in range(max(n_req // 20, 0) + (rng.random()
-                           < (n_req % 20) / 20.0)):
+        n_req = int(rng.poisson(rates[minute] / 60.0))
+        for _ in range(STEPS_PER_MIN):
+            burst = (n_req // STEPS_PER_MIN
+                     + (rng.random() < (n_req % STEPS_PER_MIN)
+                        / STEPS_PER_MIN))
+            for _ in range(int(burst)):
                 eng.submit(Request(rid, eng.t, prompt_len=4,
                                    gen_len=int(rng.integers(2, 6))))
                 rid += 1
             eng.step()
+            auto.on_tick()
         if minute % 5 == 0:
+            arch = getattr(auto.ctrl_state, "arch", None)
+            label = ARCHETYPE_NAMES[int(arch)] if arch is not None else "-"
             print(f"  min {minute:3d} rate={rates[minute]:7.1f}/min "
                   f"arch={label:12s} replicas={eng.ready_replicas}"
                   f"+{len(eng.starting)} queue={len(eng.queue)}")
@@ -72,7 +59,14 @@ def run(minutes: int, policy: str, trained, params, cfg, rates,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=int, default=20)
+    ap.add_argument("--policies", nargs="*",
+                    default=["reactive", "aapa"],
+                    help=f"any of: reactive {registry.available()}")
     args = ap.parse_args()
+    known = ("reactive", *registry.available())
+    bad = [p for p in args.policies if p not in known]
+    if bad:
+        ap.error(f"unknown policies {bad}; choose from {list(known)}")
 
     print("== load model (reduced stablelm-1.6b) ==")
     cfg = smoke_config(get_config("stablelm_1_6b"))
@@ -85,11 +79,10 @@ def main():
     print(f"   classifier test acc = {trained.test_acc:.4f}")
 
     # bursty arrival trace: quiet -> spike -> quiet
-    rng = np.random.default_rng(0)
     rates = np.full(args.minutes, 60.0)
     rates[args.minutes // 3:args.minutes // 3 + 3] = 1200.0
 
-    for policy in ("reactive", "aapa"):
+    for policy in args.policies:
         print(f"== serve {args.minutes} minutes under {policy} ==")
         s = run(args.minutes, policy, trained, params, cfg, rates,
                 np.random.default_rng(1))

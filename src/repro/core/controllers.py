@@ -1,178 +1,15 @@
-"""Autoscaling controllers: Kubernetes HPA, Generic Predictive, and AAPA.
-
-All three plug into ``repro.sim.cluster`` via the Controller protocol and
-are fully jittable.
-
-* ``hpa_controller`` — paper §IV.C baseline: reactive, 70% CPU target,
-  5-minute downscale stabilization window, 5-minute scale-down cooldown,
-  +-10% tolerance band (Kubernetes semantics).
-* ``predictive_controller`` — paper §IV.C baseline: uniform Holt-Winters,
-  15-minute prediction horizon, no workload differentiation.
-* ``aapa_controller`` — the paper's system (§III.C): every 10 minutes,
-  extract 38 features from the last 60 minutes, classify the archetype,
-  beta-calibrate the confidence, adjust Table III parameters via
-  Algorithm 1, and apply the archetype strategy.
-"""
+"""Back-compat shim: the autoscaling policies moved to
+``repro.scaling.policies`` (one control plane shared by the cluster
+simulator and the serving engine). Import from ``repro.scaling`` in new
+code; this module re-exports the original names unchanged."""
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from repro.scaling.api import Controller, Obs  # noqa: F401
+from repro.scaling.policies import (  # noqa: F401
+    AAPAState, HPAState, KPAState, PredState, aapa_controller,
+    hpa_controller, hybrid_controller, kpa_controller,
+    predictive_controller)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import features as F
-from repro.core import forecasting as fc
-from repro.core import uncertainty
-from repro.core.archetypes import table_iii_arrays
-from repro.sim.cluster import Controller, Obs, SimConfig
-
-EPSF = 1e-9
-
-
-# ---------------------------------------------------------------- HPA ----
-class HPAState(NamedTuple):
-    desired_buf: jax.Array  # ring buffer of recent desired counts
-    last_total: jax.Array
-
-
-def hpa_controller(cfg: SimConfig, *, target: float = 0.70,
-                   stabilization_min: float = 5.0,
-                   cooldown_min: float = 5.0,
-                   tolerance: float = 0.10) -> Controller:
-    buf_len = max(int(stabilization_min * 60 / cfg.control_interval_sec), 1)
-
-    def init():
-        return HPAState(
-            desired_buf=jnp.full((buf_len,), cfg.initial_replicas,
-                                 jnp.float32),
-            last_total=jnp.float32(cfg.initial_replicas))
-
-    def on_minute(state, hist, minute_idx):
-        return state
-
-    def decide(state: HPAState, obs: Obs):
-        ratio = obs.util_ema / target
-        in_band = jnp.abs(ratio - 1.0) <= tolerance
-        raw = jnp.ceil(obs.ready_total * ratio)
-        raw = jnp.where(in_band, obs.ready_total, raw)
-        # serverless scale-to-zero on sustained idle (Knative-style KPA);
-        # the activator path below wakes the endpoint on traffic.
-        idle = ((obs.util_ema < 0.02) & (obs.queue <= 0.0)
-                & (obs.rate_rps <= 1e-6))
-        raw = jnp.where(idle, 0.0, jnp.maximum(raw, 1.0))
-        wake = (obs.rate_rps > 0.0) | (obs.queue > 0.0)
-        raw = jnp.where(wake, jnp.maximum(raw, 1.0), raw)
-        buf = jnp.concatenate([state.desired_buf[1:], raw[None]])
-        # downscale stabilization: never below the window max
-        stabilized = jnp.maximum(raw, jnp.max(buf))
-        desired = jnp.where(raw >= obs.ready_total, raw, stabilized)
-        return (HPAState(buf, desired), desired,
-                jnp.float32(cooldown_min * 60.0))
-
-    return Controller("hpa", init, on_minute, decide)
-
-
-# --------------------------------------------------- Generic Predictive ----
-class PredState(NamedTuple):
-    hw: fc.HWState
-
-
-def predictive_controller(cfg: SimConfig, *, target: float = 0.70,
-                          horizon_min: int = 15, period: int = 60,
-                          cooldown_min: float = 5.0) -> Controller:
-    def init():
-        return PredState(hw=fc.hw_init(period))
-
-    def on_minute(state: PredState, hist, minute_idx):
-        return PredState(hw=fc.hw_step(state.hw, hist[-1]))
-
-    def decide(state: PredState, obs: Obs):
-        pred_per_min = jnp.maximum(
-            fc.hw_forecast_max(state.hw, horizon_min), 0.0)
-        need_pred = pred_per_min / 60.0 / (cfg.rps_per_replica * target)
-        need_now = obs.rate_rps / (cfg.rps_per_replica * target)
-        desired = jnp.ceil(jnp.maximum(need_pred, need_now))
-        # scale to zero when neither live traffic nor forecast needs pods
-        idle = ((desired < 1.0) & (obs.queue <= 0.0)
-                & (obs.rate_rps <= 1e-6))
-        desired = jnp.where(idle, 0.0, jnp.maximum(desired, 1.0))
-        return state, desired, jnp.float32(cooldown_min * 60.0)
-
-    return Controller("predictive", init, on_minute, decide)
-
-
-# ------------------------------------------------------------------ AAPA ----
-class AAPAState(NamedTuple):
-    hw: fc.HWState
-    arch: jax.Array         # int32 current archetype
-    conf: jax.Array         # f32 calibrated confidence
-    cpu_adj: jax.Array
-    cool_adj_min: jax.Array
-    minrep_adj: jax.Array
-
-
-def aapa_controller(
-        cfg: SimConfig,
-        classify: Callable[[jax.Array], tuple[jax.Array, jax.Array]],
-        *, stride_min: int = 10, horizon_min: int = 15,
-        period: int = 60) -> Controller:
-    """`classify(features [38]) -> (class id int32, confidence f32)`,
-    typically GBDT + beta calibration (see ``repro.core.pipeline``)."""
-    tab = table_iii_arrays()
-
-    def init():
-        return AAPAState(hw=fc.hw_init(period),
-                         arch=jnp.int32(2),          # start conservative
-                         conf=jnp.float32(0.5),
-                         cpu_adj=jnp.float32(0.5),
-                         cool_adj_min=jnp.float32(5.0),
-                         minrep_adj=jnp.float32(1.0))
-
-    def on_minute(state: AAPAState, hist, minute_idx):
-        hw = fc.hw_step(state.hw, hist[-1])
-
-        def reclassify(_):
-            feats = F.extract_features(hist)
-            arch, conf = classify(feats)
-            adj = uncertainty.adjust(conf, tab["target_cpu"][arch],
-                                     tab["cooldown_min"][arch],
-                                     tab["min_replicas"][arch])
-            return AAPAState(hw, arch, conf, adj.target_cpu,
-                             adj.cooldown_min, adj.min_replicas)
-
-        def keep(_):
-            return state._replace(hw=hw)
-
-        do = (minute_idx % stride_min) == 0
-        return jax.lax.cond(do, reclassify, keep, None)
-
-    def decide(state: AAPAState, obs: Obs):
-        cap = cfg.rps_per_replica * jnp.maximum(state.cpu_adj, 0.05)
-        # reactive component (archetype-specific utilization target)
-        ratio = obs.util_ema / jnp.maximum(state.cpu_adj, 0.05)
-        reactive = jnp.ceil(obs.ready_total * ratio)
-        reactive = jnp.where(jnp.abs(ratio - 1.0) <= 0.1,
-                             obs.ready_total, reactive)
-
-        # strategy components (paper Table III)
-        warm = tab["warm_pool"][state.arch]
-        need_now = jnp.ceil(obs.rate_rps / cap)
-        spike_d = need_now + warm + state.minrep_adj
-
-        hw_pred = jnp.maximum(fc.hw_forecast_max(state.hw, horizon_min),
-                              0.0) / 60.0
-        periodic_d = jnp.ceil(hw_pred / cap)
-
-        trend_pred = fc.linear_trend_forecast(
-            obs.rate_history[-30:], horizon_min) / 60.0
-        ramp_d = jnp.ceil(jnp.maximum(trend_pred, obs.rate_rps) / cap)
-
-        mean_rps = jnp.mean(obs.rate_history[-15:]) / 60.0
-        stat_d = jnp.ceil(mean_rps / cap)
-
-        strat = jnp.stack([periodic_d, spike_d, stat_d, ramp_d])[state.arch]
-        desired = jnp.maximum(jnp.maximum(reactive, strat),
-                              jnp.maximum(state.minrep_adj, 1.0))
-        return state, desired, state.cool_adj_min * 60.0
-
-    return Controller("aapa", init, on_minute, decide)
+__all__ = ["Controller", "Obs", "AAPAState", "HPAState", "KPAState",
+           "PredState", "aapa_controller", "hpa_controller",
+           "hybrid_controller", "kpa_controller", "predictive_controller"]

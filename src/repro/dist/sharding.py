@@ -1,0 +1,194 @@
+"""Logical-axis sharding: model code names axes "dp"/"mp", the mesh maps
+them to physical axes.
+
+The model and launch layers never mention physical mesh axes. They
+constrain activations with logical names:
+
+    h = shd.constrain(h, ("dp", "mp", None))
+
+and a launcher activates a mesh once:
+
+    rules = shd.set_mesh(make_production_mesh())
+
+"dp" resolves to every data-parallel axis present (("pod", "data") on the
+multi-pod mesh, ("data",) on a single pod), "mp" to the "model" axis. With
+no active mesh every helper is a no-op / replicated, so single-device
+tests and CPU smoke runs import the same model code unchanged.
+
+Any axis that does not evenly divide a dimension is dropped from that
+dimension's spec (replicated) rather than erroring — smoke configs have
+tiny dims that rarely divide a production axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_DATA_AXES = ("pod", "data")   # outer-to-inner data-parallel axes
+_MODEL_AXIS = "model"
+
+Logical = Optional[str]        # "dp" | "mp" | physical axis name | None
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Resolved logical->physical axis mapping for one mesh."""
+
+    mesh: Mesh
+    dp: tuple[str, ...]        # physical data axes present in the mesh
+    mp: str | None             # physical model axis, if present
+
+    def resolve(self, logical: Logical):
+        """Logical name -> PartitionSpec entry (axis name, tuple, or None)."""
+        if logical is None:
+            return None
+        if logical == "dp":
+            if not self.dp:
+                return None
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if logical == "mp":
+            return self.mp
+        return logical if logical in self.mesh.shape else None
+
+    def axis_size(self, logical: Logical) -> int:
+        if logical is None:
+            return 1
+        if logical == "dp":
+            return math.prod(self.mesh.shape[a] for a in self.dp) \
+                if self.dp else 1
+        if logical == "mp":
+            return self.mesh.shape[self.mp] if self.mp else 1
+        return self.mesh.shape.get(logical, 1)
+
+    def spec(self, logicals, shape) -> P:
+        """Build a PartitionSpec, dropping axes that don't divide dims."""
+        entries = []
+        for i, dim in enumerate(shape):
+            logical = logicals[i] if i < len(logicals) else None
+            size = self.axis_size(logical)
+            phys = self.resolve(logical)
+            if phys is None or size <= 1 or dim % size != 0:
+                entries.append(None)
+            else:
+                entries.append(phys)
+        return P(*entries)
+
+
+_ACTIVE: MeshRules | None = None
+
+
+def set_mesh(mesh: Mesh | None) -> MeshRules | None:
+    """Activate `mesh` for all subsequent helpers; None deactivates."""
+    global _ACTIVE
+    if mesh is None:
+        _ACTIVE = None
+        return None
+    names = mesh.axis_names
+    _ACTIVE = MeshRules(
+        mesh=mesh,
+        dp=tuple(a for a in _DATA_AXES if a in names),
+        mp=_MODEL_AXIS if _MODEL_AXIS in names else None)
+    return _ACTIVE
+
+
+def active() -> MeshRules | None:
+    return _ACTIVE
+
+
+def constrain(x: jax.Array, logicals) -> jax.Array:
+    """with_sharding_constraint under the active mesh; identity without."""
+    rules = _ACTIVE
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(logicals, x.shape)))
+
+
+# ------------------------------------------------------- tree shardings ----
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _fsdp_spec(rules: MeshRules, shape) -> P:
+    """ZeRO-3 style: shard the largest dp-divisible dim, replicate rest."""
+    dp_size = rules.axis_size("dp")
+    best = None
+    if dp_size > 1 and len(shape) >= 1:
+        divisible = [i for i, d in enumerate(shape)
+                     if d % dp_size == 0 and d >= dp_size]
+        if divisible:
+            best = max(divisible, key=lambda i: shape[i])
+    entries = [rules.resolve("dp") if i == best else None
+               for i in range(len(shape))]
+    return P(*entries)
+
+
+def param_shardings(tree: Any):
+    """NamedSharding pytree for params (or same-structured trees like the
+    optimizer's master/m/v). Expert weights shard E over "mp" and D over
+    "dp" (matching the shard_map EP path in repro.models.moe); everything
+    else is FSDP-sharded over "dp". Scalars and vectors replicate."""
+    rules = _ACTIVE
+    if rules is None:
+        raise RuntimeError("param_shardings requires set_mesh(...) first")
+
+    def one(path, leaf):
+        name = _path_name(path)
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return NamedSharding(rules.mesh, P())
+        if name.endswith(("w_gate", "w_up")) and len(shape) == 3:
+            return NamedSharding(rules.mesh,
+                                 rules.spec(("mp", "dp", None), shape))
+        if name.endswith("w_down") and len(shape) == 3:
+            return NamedSharding(rules.mesh,
+                                 rules.spec(("mp", None, "dp"), shape))
+        if name.endswith("router"):
+            return NamedSharding(rules.mesh, P())
+        return NamedSharding(rules.mesh, _fsdp_spec(rules, shape))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_shardings(tree: Any):
+    """Shard the leading (batch) dim of every leaf over "dp"."""
+    rules = _ACTIVE
+    if rules is None:
+        raise RuntimeError("batch_shardings requires set_mesh(...) first")
+
+    def one(leaf):
+        return NamedSharding(rules.mesh,
+                             rules.spec(("dp",), leaf.shape))
+
+    return jax.tree.map(one, tree)
+
+
+def cache_shardings(cache: Any, cfg):
+    """Decode-cache shardings: batch dim over "dp" (axis 1 for the
+    lax.scan-stacked per-layer subtrees, axis 0 for the unstacked leading
+    dense layers)."""
+    rules = _ACTIVE
+    if rules is None:
+        raise RuntimeError("cache_shardings requires set_mesh(...) first")
+
+    def one(path, leaf):
+        name = _path_name(path)
+        batch_axis = 0 if name.startswith("dense_layers") else 1
+        if len(leaf.shape) <= batch_axis:
+            return NamedSharding(rules.mesh, P())
+        logicals = [None] * len(leaf.shape)
+        logicals[batch_axis] = "dp"
+        return NamedSharding(rules.mesh,
+                             rules.spec(tuple(logicals), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import numpy as np
 
 from repro.configs.registry import SHAPES, cells, get_config
 from repro.dist import sharding as shd

@@ -15,6 +15,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--minutes", type=int, default=10)
+    ap.add_argument("--policy", default="aapa",
+                    help="any repro.scaling registry policy")
     args = ap.parse_args()
 
     if args.dry_run:
@@ -31,7 +33,11 @@ def main():
     from repro.core import gbdt, pipeline
     from repro.data.azure_synth import generate_traces
     from repro.models import model as M
-    from repro.serve.engine import Request, ServingEngine
+    from repro.scaling import registry
+
+    if args.policy not in ("reactive", *registry.available()):
+        raise SystemExit(f"unknown --policy {args.policy!r}; "
+                         f"available: {registry.available()}")
 
     cfg = smoke_config(get_config(args.arch))
     params = M.init(jax.random.PRNGKey(0), cfg)
@@ -44,7 +50,8 @@ def main():
     rng = np.random.default_rng(0)
     rates = np.full(args.minutes, 120.0)
     rates[args.minutes // 2] = 2000.0
-    s = demo.run(args.minutes, "aapa", trained, params, cfg, rates, rng)
+    s = demo.run(args.minutes, args.policy, trained, params, cfg, rates,
+                 rng)
     print(f"[serve] {s}")
 
 

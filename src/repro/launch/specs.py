@@ -8,7 +8,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import SHAPES, ShapeSpec, get_config
+from repro.configs.registry import ShapeSpec
 from repro.models import model as M
 from repro.models.common import ModelConfig
 from repro.train import optimizer as opt_lib

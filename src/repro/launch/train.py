@@ -44,10 +44,6 @@ def main():
     import numpy as np
     import jax.numpy as jnp
     from repro.configs import get_config, smoke_config
-    from repro.configs.registry import SHAPES
-    from repro.dist import sharding as shd
-    from repro.launch import specs as sp
-    from repro.launch.mesh import make_production_mesh
     from repro.models import model as M
     from repro.train import checkpoint as ckpt
     from repro.train import optimizer as opt_lib

@@ -6,7 +6,6 @@ Activations default to bf16, accumulation/softmax in f32.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

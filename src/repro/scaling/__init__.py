@@ -1,0 +1,23 @@
+"""Unified autoscaling control plane.
+
+Layout:
+
+* ``api``       — the backend-agnostic Controller/Obs protocol and shared
+                  cooldown (scale-down stabilization) semantics.
+* ``policies``  — hpa / predictive / aapa / kpa / hybrid controllers.
+* ``registry``  — named factories with default hyperparameters:
+                  ``get_controller("hpa", cfg, target=0.6)``.
+* ``batch``     — policies x workloads in ONE jitted scan
+                  (``make_batch_simulator``) + hyperparameter-grid
+                  stacking (``make_grid_simulator``).
+* ``scenarios`` — named workload/plant configurations and sweeps.
+* ``adapter``   — drives the Python-loop ``repro.serve.engine`` with the
+                  same controllers.
+
+The cluster simulator (`repro.sim.cluster`) is the jittable plant; the
+serving engine (`repro.serve.engine`) is the Python plant. Both consume
+exactly this protocol.
+"""
+from repro.scaling.api import (Controller, LimiterState, Obs,       # noqa: F401
+                               ScaleAction, apply_decision, limiter_init)
+from repro.scaling.registry import available, get_controller  # noqa: F401

@@ -1,0 +1,125 @@
+"""Batched multi-policy simulation: policies x workloads in ONE compile.
+
+``make_simulator`` (one policy, vmapped workloads) compiles one scan per
+policy — benchmarks that sweep policies pay the XLA compile N times and
+dispatch N times. This module folds the policy axis into the same
+compiled scan:
+
+* `make_batch_simulator(controllers, cfg)` — arbitrary (heterogeneous)
+  controllers. Every controller's state is carried in a tuple slot and
+  evolves exactly as it would standalone; a per-lane policy index selects
+  whose decision drives the plant. `jit(vmap(vmap(simulate)))` over
+  policies x workloads: one scan, one dispatch. Lane p's trajectory is
+  bit-for-bit the trajectory of controller p alone (the parity test in
+  tests/test_scaling.py pins this). Trade-off: every lane evaluates all
+  P `decide`s (O(P^2) controller flops for one compile + one dispatch) —
+  the plant dynamics dominate and P is single-digit, but for large
+  homogeneous sweeps prefer `make_grid_simulator`, which has no
+  duplicated work.
+
+* `make_grid_simulator(name, grid, cfg)` — same-structured controllers
+  (one registry family, hyperparameters declared `stackable`). The
+  hyperparameters are stacked into arrays and the *factory itself* is
+  traced with per-lane scalars, so no per-slot state duplication at all.
+  This is the cheap path for hyperparameter sweeps (target CPU, panic
+  thresholds, guardrail fractions...).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.scaling import registry
+from repro.scaling.api import Controller
+from repro.sim.cluster import MinuteOut, SimConfig, simulate
+
+
+def stack_controllers(controllers: Sequence[Controller],
+                      policy_idx) -> Controller:
+    """One Controller carrying every component's state; `policy_idx`
+    (a traced scalar) selects whose desired/cooldown drive the plant.
+    Component states evolve independently, so the selected lane's
+    dynamics are identical to running that controller alone."""
+    ctrls = list(controllers)
+
+    def init():
+        return tuple(c.init() for c in ctrls)
+
+    def on_minute(state, hist, minute_idx):
+        return tuple(c.on_minute(s, hist, minute_idx)
+                     for c, s in zip(ctrls, state))
+
+    def decide(state, obs):
+        outs = [c.decide(s, obs) for c, s in zip(ctrls, state)]
+        new_state = tuple(o[0] for o in outs)
+        desired = jnp.stack(
+            [jnp.asarray(o[1], jnp.float32) for o in outs])[policy_idx]
+        cool = jnp.stack(
+            [jnp.asarray(o[2], jnp.float32) for o in outs])[policy_idx]
+        return new_state, desired, cool
+
+    name = "batch[" + ",".join(c.name for c in ctrls) + "]"
+    return Controller(name, init, on_minute, decide)
+
+
+def make_batch_simulator(controllers: Sequence[Controller],
+                         cfg: SimConfig = SimConfig()):
+    """jit(vmap(vmap(simulate))): rates [W, M] -> MinuteOut [P, W, M]."""
+    ctrls = list(controllers)
+
+    def sim_one(idx, rates):
+        return simulate(rates, stack_controllers(ctrls, idx), cfg)
+
+    over_workloads = jax.vmap(sim_one, in_axes=(None, 0))
+    over_policies = jax.vmap(over_workloads, in_axes=(0, None))
+    idxs = jnp.arange(len(ctrls), dtype=jnp.int32)
+    return jax.jit(lambda rates: over_policies(
+        idxs, rates.astype(jnp.float32)))
+
+
+def batch_simulate(controllers: Sequence[Controller], rates,
+                   cfg: SimConfig = SimConfig()) -> MinuteOut:
+    """Convenience wrapper: rates [W, M] -> MinuteOut of [P, W, M]."""
+    return make_batch_simulator(controllers, cfg)(jnp.asarray(rates))
+
+
+def make_grid_simulator(name: str, grid: Sequence[dict],
+                        cfg: SimConfig = SimConfig(), *,
+                        classify=None, **fixed):
+    """One policy family, a grid of hyperparameter points, one compile.
+
+    `grid` is a list of dicts over the family's `stackable` keys; every
+    point must set the same keys. Returns a jitted fn
+    rates [W, M] -> MinuteOut [len(grid), W, M].
+    """
+    sp = registry.spec(name)
+    if not grid:
+        raise ValueError("empty hyperparameter grid")
+    keys = sorted(grid[0])
+    bad = set(keys) - set(sp.stackable)
+    if bad:
+        raise TypeError(f"policy {name!r} cannot stack {sorted(bad)}; "
+                        f"stackable: {sorted(sp.stackable)}")
+    for g in grid:
+        if sorted(g) != keys:
+            raise ValueError("every grid point must set the same keys")
+    stacked = {k: jnp.asarray([float(g[k]) for g in grid], jnp.float32)
+               for k in keys}
+
+    def sim_one(hyper, rates):
+        kw = dict(sp.defaults)
+        kw.update(fixed)
+        kw.update(hyper)       # traced per-lane scalars
+        if sp.needs_classifier:
+            ctrl = sp.factory(cfg, classify or registry.default_classify,
+                              **kw)
+        else:
+            ctrl = sp.factory(cfg, **kw)
+        return simulate(rates, ctrl, cfg)
+
+    over_workloads = jax.vmap(sim_one, in_axes=(None, 0))
+    over_grid = jax.vmap(over_workloads, in_axes=(0, None))
+    return jax.jit(lambda rates: over_grid(
+        stacked, jnp.asarray(rates, jnp.float32)))

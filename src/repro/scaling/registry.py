@@ -1,0 +1,122 @@
+"""Named controller factories with per-policy default hyperparameters.
+
+    from repro.scaling import registry
+    ctrl = registry.get_controller("hpa", SimConfig(), target=0.6)
+
+Benchmarks, examples, and the serving launcher all resolve policies here,
+so adding a policy is one `register(...)` call (see README "add your own
+controller"). Each spec also declares which hyperparameters are
+*stackable* — safe to pass as traced jnp scalars — which
+``repro.scaling.batch`` uses to vmap one compiled simulation over a
+hyperparameter grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.scaling import policies as P
+from repro.scaling.api import Controller
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    factory: Callable[..., Controller]   # factory(cfg, **hyper) -> Controller
+    defaults: dict[str, Any]
+    stackable: tuple[str, ...] = ()      # kwargs that may be traced arrays
+    needs_classifier: bool = False
+    description: str = ""
+
+
+_REGISTRY: dict[str, PolicySpec] = {}
+
+
+def register(name: str, factory: Callable[..., Controller], *,
+             defaults: dict[str, Any] | None = None,
+             stackable: tuple[str, ...] = (),
+             needs_classifier: bool = False,
+             description: str = "") -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"policy {name!r} already registered")
+    _REGISTRY[name] = PolicySpec(name, factory, dict(defaults or {}),
+                                 stackable, needs_classifier, description)
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def spec(name: str) -> PolicySpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; "
+                       f"available: {available()}") from None
+
+
+def default_classify(feats):
+    """Fallback classifier for aapa-family policies when no trained model
+    is supplied: STATIONARY_NOISY at 0.5 confidence, i.e. Algorithm 1's
+    conservative midpoint. Real runs pass `trained.make_classify()`."""
+    return jnp.int32(2), jnp.float32(0.5)
+
+
+def get_controller(name: str, cfg, *, classify=None,
+                   **overrides) -> Controller:
+    """Build a registered controller with defaults + overrides applied."""
+    sp = spec(name)
+    kw = dict(sp.defaults)
+    unknown = set(overrides) - set(kw)
+    if unknown:
+        raise TypeError(f"policy {name!r} has no hyperparameters "
+                        f"{sorted(unknown)}; accepts {sorted(kw)}")
+    kw.update(overrides)
+    if sp.needs_classifier:
+        return sp.factory(cfg, classify or default_classify, **kw)
+    return sp.factory(cfg, **kw)
+
+
+# ------------------------------------------------------ built-in catalog ----
+register(
+    "hpa", P.hpa_controller,
+    defaults=dict(target=0.70, stabilization_min=5.0, cooldown_min=5.0,
+                  tolerance=0.10),
+    stackable=("target", "cooldown_min", "tolerance"),
+    description="Kubernetes HPA: reactive CPU-target scaling with "
+                "downscale stabilization (paper §IV.C baseline).")
+
+register(
+    "predictive", P.predictive_controller,
+    defaults=dict(target=0.70, horizon_min=15, period=60,
+                  cooldown_min=5.0),
+    stackable=("target", "cooldown_min"),
+    description="Generic predictive: uniform Holt-Winters, 15-minute "
+                "horizon (paper §IV.C baseline).")
+
+register(
+    "aapa", P.aapa_controller,
+    defaults=dict(stride_min=10, horizon_min=15, period=60),
+    needs_classifier=True,
+    description="Archetype-aware predictive autoscaler with uncertainty "
+                "quantification (the paper's system, §III).")
+
+register(
+    "kpa", P.kpa_controller,
+    defaults=dict(target_concurrency=None, panic_threshold=2.0,
+                  stable_window_s=60.0, panic_window_s=6.0,
+                  cooldown_min=1.0),
+    stackable=("panic_threshold",),
+    description="Knative-KPA-style concurrency scaler with stable/panic "
+                "windows.")
+
+register(
+    "hybrid", P.hybrid_controller,
+    defaults=dict(guard_target=0.85, max_down_frac=0.3, stride_min=10,
+                  horizon_min=15, period=60),
+    stackable=("guard_target", "max_down_frac"),
+    needs_classifier=True,
+    description="AAPA with a reactive guardrail floor and bounded "
+                "scale-down steps.")

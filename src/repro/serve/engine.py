@@ -1,12 +1,18 @@
-"""Serving engine: continuous-batching decode over replica lanes, with the
-AAPA autoscaler as the replica control plane.
+"""Serving engine: continuous-batching decode over replica lanes.
 
 A *replica* is one model instance with `lanes` concurrent decode slots
 (continuous batching). The engine keeps a FIFO of requests; each engine
 step admits requests to free slots across all ready replicas, runs one
-batched decode step, and retires finished sequences. Replica counts come
-from an autoscaling Controller fed with the observed arrival trace — this
-is the paper's system applied to model serving (DESIGN.md §2).
+batched decode step, and retires finished sequences. The engine is a pure
+plant: replica counts come from `engine.scale_to`, normally driven by a
+`repro.scaling` Controller through `repro.scaling.adapter.EngineAutoscaler`
+— the same policies (and the same cooldown semantics) that run compiled
+inside the cluster simulator.
+
+Idle semantics match the simulator: `scale_to(0)` is honored (scale to
+zero), and a request arriving with zero ready replicas counts as a cold
+start and wakes the endpoint through the activator (one replica starts if
+none is already starting).
 
 Pod startup latency is modelled (a replica added at t serves from
 t + startup). On this CPU container the model is a reduced config; on TPU
@@ -16,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
 
 import numpy as np
 import jax
@@ -53,7 +58,7 @@ class ServingEngine:
     def __init__(self, cfg, params, *, lanes_per_replica: int = 4,
                  max_replicas: int = 8, max_len: int = 64,
                  step_time_s: float = 0.05, startup_s: float = 2.0,
-                 slo_s: float = 1.0):
+                 slo_s: float = 1.0, activator: bool = True):
         self.cfg = cfg
         self.params = params
         self.lanes = lanes_per_replica
@@ -62,11 +67,14 @@ class ServingEngine:
         self.step_time = step_time_s
         self.startup_s = startup_s
         self.slo_s = slo_s
+        self.activator = activator
 
         self.t = 0.0
         self.ready_replicas = 1
         self.starting: list[float] = []     # ready-at times
         self.queue: deque[Request] = deque()
+        self.arrivals_total = 0             # monotonic arrival counter
+        self._arrival_times: deque[float] = deque()  # for observed_rate
         n_slots = max_replicas * lanes_per_replica
         self.cache = M.init_cache(cfg, n_slots, max_len)
         self.active: dict[int, Request] = {}   # slot -> request
@@ -77,7 +85,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------- control
     def scale_to(self, desired: int) -> None:
-        desired = int(np.clip(desired, 1, self.max_replicas))
+        """Honors 0 (scale-to-zero): starting pods cancel first, then
+        ready pods drain — matching the simulator's idle semantics."""
+        desired = int(np.clip(desired, 0, self.max_replicas))
         total = self.ready_replicas + len(self.starting)
         if desired > total:
             for _ in range(desired - total):
@@ -87,12 +97,21 @@ class ServingEngine:
             while drop and self.starting:
                 self.starting.pop()
                 drop -= 1
-            self.ready_replicas = max(self.ready_replicas - drop, 1)
+            self.ready_replicas = max(self.ready_replicas - drop, 0)
 
     # --------------------------------------------------------------- step
     def submit(self, req: Request) -> None:
-        if self.ready_replicas == 0 and not self.active:
+        # every arrival with zero ready pods experiences a cold start
+        # (same accounting as the simulator); the activator wakes the
+        # endpoint if nothing is already starting.
+        if self.ready_replicas == 0:
             self.stats.cold_starts += 1
+            if self.activator and not self.starting:
+                self.starting.append(self.t + self.startup_s)
+        self.arrivals_total += 1
+        # record the submission time, not the caller-supplied arrival
+        # field: observed_rate's windowing needs monotonic timestamps
+        self._arrival_times.append(self.t)
         self.queue.append(req)
 
     def step(self) -> None:
@@ -138,16 +157,38 @@ class ServingEngine:
             for s in done:
                 del self.active[s]
 
-        self.stats.replica_seconds += (self.ready_replicas
+        # bill ready + starting pods, plus draining capacity: replicas
+        # removed by scale_to keep finishing their in-flight requests
+        # (graceful drain) and that time is still paid for
+        draining = max(-(-len(self.active) // self.lanes)
+                       - self.ready_replicas, 0)
+        self.stats.replica_seconds += (self.ready_replicas + draining
                                        + len(self.starting)) \
             * self.step_time
         self.stats.steps += 1
         self.t += self.step_time
 
     # ------------------------------------------------------------ metrics
+    RATE_RETENTION_S = 600.0   # longest window observed_rate supports
+
     def observed_rate(self, window_s: float = 60.0) -> float:
-        recent = [r for r in self.stats.latencies_ms]
-        return len(recent) / max(self.t, 1e-9)
+        """True sliding-window arrival rate (req/s over the trailing
+        `window_s`, or over the elapsed time when younger than that).
+        Non-destructive for any window up to RATE_RETENTION_S, so mixed
+        window sizes may be queried in any order; larger windows clamp
+        to the retention horizon."""
+        window_s = min(window_s, self.RATE_RETENTION_S)
+        keep_cutoff = self.t - self.RATE_RETENTION_S
+        while self._arrival_times and self._arrival_times[0] < keep_cutoff:
+            self._arrival_times.popleft()
+        cutoff = self.t - window_s
+        count = 0
+        for a in reversed(self._arrival_times):
+            if a < cutoff:
+                break
+            count += 1
+        horizon = min(window_s, max(self.t, self.step_time))
+        return count / horizon
 
     def summary(self) -> dict:
         lat = np.asarray(self.stats.latencies_ms)

@@ -9,19 +9,28 @@ Replaces the paper's SimPy simulator (§IV.B) with the same dynamics:
 * requests uniform within each trace minute (paper's stated simplification).
 
 Structure: outer `lax.scan` over minutes, inner `lax.scan` over 1 s ticks.
-Controllers are pluggable (init / on_minute / decide) and run every
-`control_interval_sec`. `vmap` over workloads gives thousands of simulated
-workload-days per minute of wall clock (vs the paper's 7 min per
-workload-day).
+This module is the *plant*; the control plane lives in `repro.scaling`:
+the Controller/Obs protocol and the cooldown semantics come from
+`repro.scaling.api` (re-exported here for back-compat), the policies from
+`repro.scaling.policies`, and batched policies-x-workloads evaluation
+from `repro.scaling.batch`. `vmap` over workloads gives thousands of
+simulated workload-days per minute of wall clock (vs the paper's 7 min
+per workload-day).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.scaling.api import (Controller, LimiterState, Obs,
+                               apply_decision, limiter_init)
+
+__all__ = ["Controller", "Obs", "SimConfig", "SimState", "MinuteOut",
+           "simulate", "make_simulator"]
 
 EPSF = 1e-9
 
@@ -43,35 +52,13 @@ class SimConfig:
     resp_cap_sec: float = 600.0    # cap reported response times (metrics)
 
 
-class Obs(NamedTuple):
-    """What a controller sees at a control step."""
-    ready_total: jax.Array   # ready + starting replicas
-    ready: jax.Array         # ready replicas only
-    util_ema: jax.Array      # 1-min aggregated CPU utilization
-    queue: jax.Array         # queued requests
-    rate_rps: jax.Array      # current arrival rate (req/s)
-    rate_history: jax.Array  # [history_len] per-minute counts (old->new)
-    minute_idx: jax.Array    # int32 global minute
-
-
-class Controller(NamedTuple):
-    """Pluggable autoscaling policy (all functions jittable)."""
-    name: str
-    init: Callable[[], Any]                      # -> ctrl_state
-    on_minute: Callable[[Any, jax.Array, jax.Array], Any]
-    # (ctrl_state, rate_history, minute_idx) -> ctrl_state
-    decide: Callable[[Any, Obs], tuple[Any, jax.Array, jax.Array]]
-    # (ctrl_state, obs) -> (ctrl_state, desired_replicas, cooldown_sec)
-
-
 class SimState(NamedTuple):
     ready: jax.Array         # f32 ready replicas
     pipeline: jax.Array      # [startup_sec] replicas starting (FIFO)
     queue: jax.Array         # f32 queued requests
     wait_sum: jax.Array      # f32 total request-seconds waited by the queue
     util_ema: jax.Array
-    cooldown: jax.Array      # seconds until scale-down allowed
-    last_dir: jax.Array      # +1/-1/0 last scaling direction
+    lim: LimiterState        # scale-down cooldown / direction tracking
     rate_history: jax.Array  # [history_len] per-minute arrival counts
     ctrl_state: Any
 
@@ -140,35 +127,23 @@ def _tick(cfg: SimConfig, controller: Controller, state: SimState,
         ctrl_state_new, state.ctrl_state)
     desired = jnp.clip(desired, 0.0, cfg.max_replicas)
 
-    scale_up = do_ctrl & (desired > total + 0.5)
-    can_down = state.cooldown <= 0.0
-    scale_down = do_ctrl & (desired < total - 0.5) & can_down
+    lim, act = apply_decision(state.lim, total, desired, cool_req,
+                              do_ctrl, dt=1.0)
+    pipeline = pipeline.at[-1].add(act.add)
 
-    add = jnp.where(scale_up, desired - total, 0.0)
-    pipeline = pipeline.at[-1].add(add)
-
-    remove = jnp.where(scale_down, total - desired, 0.0)
     # cancel starting pods first, then ready pods
     n_start = jnp.sum(pipeline)
-    from_pipe = jnp.minimum(remove, n_start)
+    from_pipe = jnp.minimum(act.remove, n_start)
     pipeline = pipeline * (1.0 - from_pipe / jnp.maximum(n_start, EPSF))
-    ready = jnp.maximum(ready - (remove - from_pipe), 0.0)
-
-    dir_now = jnp.where(scale_up, 1.0, jnp.where(scale_down, -1.0, 0.0))
-    osc = ((dir_now != 0.0) & (state.last_dir != 0.0)
-           & (dir_now != state.last_dir)).astype(jnp.float32)
-    last_dir = jnp.where(dir_now != 0.0, dir_now, state.last_dir)
-    cooldown = jnp.where(scale_down, cool_req,
-                         jnp.maximum(state.cooldown - 1.0, 0.0))
+    ready = jnp.maximum(ready - (act.remove - from_pipe), 0.0)
 
     new_state = SimState(ready=ready, pipeline=pipeline, queue=queue,
                          wait_sum=wait_sum, util_ema=util_ema,
-                         cooldown=cooldown, last_dir=last_dir,
-                         rate_history=state.rate_history,
+                         lim=lim, rate_history=state.rate_history,
                          ctrl_state=ctrl_state)
     out = (served, violated, cold, ready + jnp.sum(pipeline), resp,
-           util_inst, scale_up.astype(jnp.float32),
-           scale_down.astype(jnp.float32), osc, ready)
+           util_inst, act.scale_up.astype(jnp.float32),
+           act.scale_down.astype(jnp.float32), act.oscillation, ready)
     return new_state, out
 
 
@@ -212,8 +187,7 @@ def simulate(rates_per_min: jax.Array, controller: Controller,
         queue=jnp.float32(0.0),
         wait_sum=jnp.float32(0.0),
         util_ema=jnp.float32(0.5),
-        cooldown=jnp.float32(0.0),
-        last_dir=jnp.float32(0.0),
+        lim=limiter_init(),
         rate_history=jnp.zeros((cfg.history_len,), jnp.float32),
         ctrl_state=controller.init())
     (state, _), out = jax.lax.scan(

@@ -5,7 +5,6 @@ data-parallel reduction.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import scipy.stats
-from hypothesis import given, settings, strategies as st
+from _hypo_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,5 +1,4 @@
 """Serving engine behaviour (continuous batching + scaling control)."""
-import numpy as np
 import jax
 import pytest
 
@@ -55,6 +54,36 @@ def test_scale_down_cancels_starting_first(engine_parts):
     assert len(eng.starting) == 3
     eng.scale_to(2)
     assert len(eng.starting) == 1 and eng.ready_replicas == 1
+
+
+def test_observed_rate_uses_sliding_window(engine_parts):
+    cfg, params = engine_parts
+    eng = _mk(cfg, params)
+    for i in range(8):
+        eng.submit(Request(i, eng.t, prompt_len=2, gen_len=2))
+    for _ in range(20):               # advance to t = 1.0 s
+        eng.step()
+    # all 8 arrivals sit at t=0: outside a 0.5 s window, inside a 2 s
+    # one — in either query order (non-destructive windowing)
+    assert eng.observed_rate(window_s=0.5) == 0.0
+    assert eng.observed_rate(window_s=2.0) == pytest.approx(8.0)
+
+
+def test_scale_to_zero_and_activator_cold_start(engine_parts):
+    cfg, params = engine_parts
+    eng = _mk(cfg, params, startup_s=0.1)
+    eng.scale_to(0)
+    assert eng.ready_replicas == 0 and not eng.starting
+    # arrivals during zero-ready each count as a cold start, and the
+    # activator wakes exactly one replica
+    for i in range(3):
+        eng.submit(Request(i, eng.t, prompt_len=2, gen_len=2))
+    assert eng.stats.cold_starts == 3
+    assert len(eng.starting) == 1
+    for _ in range(20):
+        eng.step()
+    assert eng.ready_replicas == 1
+    assert eng.summary()["served"] == 3
 
 
 def test_more_replicas_more_throughput(engine_parts):

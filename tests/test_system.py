@@ -1,6 +1,5 @@
 """End-to-end behaviour: traces -> weak labels -> classifier -> calibrated
 confidence -> archetype-aware autoscaling, on a miniature dataset."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

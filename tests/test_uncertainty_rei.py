@@ -1,8 +1,7 @@
 """Algorithm 1 (uncertainty-aware adjustment) + REI metric."""
-import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo_compat import given, settings, st
 
 from repro.core import rei as R
 from repro.core import uncertainty as U
