@@ -93,6 +93,21 @@ def main():
                                         "RAMP": 2.1,
                                         "STATIONARY_NOISY": 2.0}
 
+    # forecaster sweep: the predictive family over every registered
+    # forecaster, one compiled forecasters x policies x workloads scan
+    from repro.forecast import registry as forecast_registry
+    fore = forecast_registry.available()
+    sweep_traces = generate_traces(n_functions=8, n_days=2, seed=4242)
+    sweep_rates = jnp.asarray(sweep_traces.counts[:, -1440:])
+    fsim = batch.make_forecast_batch_simulator(("predictive",), fore, cfg)
+    fout = fsim(sweep_rates)                            # [F, 1, W, M]
+    payload["forecaster_sweep"] = {
+        f: {"slo_violation_rate": m.slo_violation_rate,
+            "replica_minutes": m.replica_minutes}
+        for f, m in ((f, M.aggregate(
+            jax.tree.map(lambda a: a[i, 0], fout), workload_axis=True))
+            for i, f in enumerate(fore))}
+
     # headline derived numbers
     derived = []
     for gname in ("SPIKE", "STATIONARY_NOISY"):

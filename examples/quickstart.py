@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import gbdt, pipeline, rei
 from repro.data.azure_synth import generate_traces
+from repro.forecast import conformal, registry as forecast_registry
 from repro.scaling import batch, registry
 from repro.sim import metrics as M
 from repro.sim.cluster import SimConfig
@@ -27,12 +28,26 @@ def main():
           f"test_acc={trained.test_acc:.4f} (paper: 0.998)")
     print(f"   weak-label dist={np.round(trained.label_dist, 3)}")
 
-    print("== 2. replay one day under every registered autoscaler ==")
+    print("== 2. calibrate forecast uncertainty (split conformal) ==")
+    fcst = forecast_registry.make("holt_winters")
+    band = conformal.calibrate(fcst, traces.counts[:16, :2 * 1440],
+                               alpha=0.9)
+    cov = conformal.coverage(fcst, band,
+                             traces.counts[:16, 2 * 1440:3 * 1440])
+    print(f"   forecasters={forecast_registry.available()}")
+    print(f"   holt_winters 90% band: half-width={float(band.q):.1f} "
+          f"req/min  held-out coverage={cov:.3f}  "
+          f"confidence={float(conformal.confidence(band)):.3f}")
+
+    print("== 3. replay one day under every registered autoscaler ==")
     cfg = SimConfig()
     rates = jnp.asarray(traces.counts[:16, -1440:])
     names = registry.available()
     ctrls = [registry.get_controller(n, cfg,
-                                     classify=trained.make_classify())
+                                     classify=trained.make_classify(),
+                                     **({"band": band}
+                                        if registry.spec(n).takes_forecaster
+                                        else {}))
              for n in names]
     # one jitted policies x workloads simulation for the whole table
     out_all = batch.batch_simulate(ctrls, rates, cfg)

@@ -66,25 +66,44 @@ def hw_forecast_max(state: HWState, horizon: int) -> jax.Array:
     return jnp.max(preds)
 
 
-@partial(jax.jit, static_argnames=("period",))
+_SMOOTH_BUCKET = 256     # series lengths round up to this compile bucket
+
+
+@partial(jax.jit, static_argnames=("period",), donate_argnums=(0,))
+def _hw_smooth_padded(y: jax.Array, alpha, beta, gamma, *,
+                      period: int) -> jax.Array:
+    def scan_one(series):
+        def body(state, yt):
+            pred = hw_forecast(state, 1)
+            nxt = hw_step(state, yt, alpha=alpha, beta=beta, gamma=gamma)
+            return nxt, pred
+        init = hw_init(period, series[0])
+        _, preds = jax.lax.scan(body, init, series)
+        return preds
+
+    return jax.vmap(scan_one)(y)
+
+
 def hw_smooth(y: jax.Array, *, period: int = 60, alpha=0.1, beta=0.01,
               gamma=0.3) -> jax.Array:
     """One-step-ahead forecasts over a whole series.
 
     y [..., T] -> forecasts [..., T] where forecasts[..., t] is the
     prediction of y[..., t] made at time t-1. Vectorizes over leading axes.
-    """
-    def scan_one(series):
-        def body(state, yt):
-            pred = hw_forecast(state, 1)
-            return hw_step(state, yt, alpha=alpha, beta=beta, gamma=gamma), pred
-        init = hw_init(period, series[0])
-        _, preds = jax.lax.scan(body, init, series)
-        return preds
 
-    flat = y.reshape((-1, y.shape[-1]))
-    out = jax.vmap(scan_one)(flat.astype(jnp.float32))
-    return out.reshape(y.shape)
+    The recurrence is causal, so the series is zero-padded up to the next
+    ``_SMOOTH_BUCKET`` multiple before entering the jitted scan: backtests
+    over mixed-length traces inside one bucket reuse a single compilation
+    (the padded scratch buffer is donated). `period` stays a static arg of
+    the inner jit; alpha/beta/gamma are traced scalars.
+    """
+    T = y.shape[-1]
+    pad_t = -(-T // _SMOOTH_BUCKET) * _SMOOTH_BUCKET
+    flat = jnp.asarray(y, jnp.float32).reshape((-1, T))
+    padded = jnp.pad(flat, ((0, 0), (0, pad_t - T)))
+    out = _hw_smooth_padded(padded, jnp.float32(alpha), jnp.float32(beta),
+                            jnp.float32(gamma), period=period)
+    return out[:, :T].reshape(y.shape)
 
 
 def linear_trend_forecast(history: jax.Array, horizon: int) -> jax.Array:

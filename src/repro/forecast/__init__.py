@@ -1,0 +1,14 @@
+"""Unified forecasting + uncertainty subsystem for the scaling control
+plane: the `Forecaster` protocol (`api`), built-in models (`models`),
+named factories with per-archetype defaults (`registry`), split-conformal
+intervals (`conformal`), and batched offline backtests (`backtest`).
+
+Confidence flows forecaster -> conformal band -> Algorithm 1
+(``repro.core.uncertainty.adjust``) -> policy; see README.
+"""
+from repro.forecast import backtest, conformal, registry  # noqa: F401
+from repro.forecast.api import (Forecaster, FState, Interval,  # noqa: F401
+                                interval_confidence, make_forecaster)
+
+__all__ = ["Forecaster", "FState", "Interval", "interval_confidence",
+           "make_forecaster", "backtest", "conformal", "registry"]

@@ -1,0 +1,68 @@
+"""Batched offline backtests: forecasters x series in ONE jitted scan.
+
+Conformal calibration and the forecast benchmarks replay every candidate
+forecaster over every trace. Running `forecaster.smooth` per model costs
+one compile and one dispatch per forecaster; here the models' states ride
+in one scan carry (the ``repro.scaling.batch.stack_controllers`` trick
+applied to forecasters), so the whole F x B x T backtest is one compile
+and one dispatch. Lane f's predictions are exactly the streaming path of
+forecaster f alone (`stream_smooth`, pinned by test).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.forecast import registry
+from repro.forecast.api import Forecaster
+
+
+def _resolve(forecasters: Sequence[Forecaster | str]) -> list[Forecaster]:
+    return [registry.make(f) for f in forecasters]
+
+
+def stream_smooth(forecaster: Forecaster | str, y: jax.Array) -> jax.Array:
+    """Streaming one-step backtest of one forecaster: scan of
+    forecast(·, 1) + update. y [B, T] -> preds [B, T].
+
+    This is the per-forecaster reference path for `batch_smooth` (and is
+    identical to `forecaster.smooth` for models without a custom offline
+    kernel path)."""
+    f = registry.make(forecaster)
+
+    def one(series):
+        def body(st, yt):
+            return f.update(st, yt), f.forecast(st, 1).point
+        _, preds = jax.lax.scan(body, f.init(), series)
+        return preds
+
+    return jax.vmap(one)(jnp.asarray(y, jnp.float32))
+
+
+def make_batch_backtest(forecasters: Sequence[Forecaster | str]):
+    """jitted fn: y [B, T] -> one-step-ahead predictions [F, B, T]."""
+    fcs = _resolve(forecasters)
+
+    def run(y):
+        def one_series(series):
+            def body(states, yt):
+                preds = jnp.stack([f.forecast(s, 1).point
+                                   for f, s in zip(fcs, states)])
+                new = tuple(f.update(s, yt) for f, s in zip(fcs, states))
+                return new, preds
+            init = tuple(f.init() for f in fcs)
+            _, out = jax.lax.scan(body, init, series)     # [T, F]
+            return out.T                                  # [F, T]
+
+        return jax.vmap(one_series, in_axes=0,
+                        out_axes=1)(jnp.asarray(y, jnp.float32))
+
+    return jax.jit(run)
+
+
+def batch_smooth(forecasters: Sequence[Forecaster | str],
+                 y: jax.Array) -> jax.Array:
+    """Convenience wrapper: y [B, T] -> predictions [F, B, T]."""
+    return make_batch_backtest(forecasters)(y)

@@ -64,6 +64,24 @@ class EngineAutoscaler:
         self._next_ctrl = 0.0
         self._last_ctrl_t = 0.0
         self.last_desired = float(engine.ready_replicas)
+        self.last_cooldown_s = 0.0     # logical seconds, last decide()
+
+    @classmethod
+    def from_policy(cls, engine, policy: str, *, classify=None,
+                    forecaster=None, minute_s: float = 60.0,
+                    cfg: SimConfig | None = None,
+                    **overrides) -> "EngineAutoscaler":
+        """Resolve `policy` (and optionally a ``repro.forecast`` registry
+        `forecaster` name) through ``repro.scaling.registry`` against a
+        SimConfig derived from the engine — the one-liner the serving
+        demos use."""
+        from repro.scaling import registry
+        cfg = cfg or sim_config_for_engine(engine, minute_s=minute_s)
+        if forecaster is not None:
+            overrides["forecaster"] = forecaster
+        ctrl = registry.get_controller(policy, cfg, classify=classify,
+                                       **overrides)
+        return cls(engine, ctrl, cfg, minute_s=minute_s)
 
     # ------------------------------------------------------------ sensing
     def _observe(self) -> Obs:
@@ -125,6 +143,7 @@ class EngineAutoscaler:
             dt=float(dt_logical))
         target = float(total) + float(act.add) - float(act.remove)
         self.last_desired = float(desired)
+        self.last_cooldown_s = float(cool)
         eng.scale_to(int(round(target)))
 
 

@@ -85,6 +85,38 @@ def batch_simulate(controllers: Sequence[Controller], rates,
     return make_batch_simulator(controllers, cfg)(jnp.asarray(rates))
 
 
+def make_forecast_batch_simulator(policies: Sequence[str],
+                                  forecasters: Sequence,
+                                  cfg: SimConfig = SimConfig(), *,
+                                  classify=None, **overrides):
+    """Forecasters x policies x workloads in ONE compiled scan.
+
+    Every policy must be forecaster-aware (`takes_forecaster` in its
+    registry spec: `predictive`, `aapa`, `hybrid`); `forecasters` are
+    ``repro.forecast.registry`` names or Forecaster instances. Returns a
+    fn rates [W, M] -> MinuteOut [F, P, W, M]; lane (f, p) is bit-for-bit
+    the standalone simulation of policy p using forecaster f (pinned by
+    tests/test_forecast.py)."""
+    aware = [n for n in registry.available()
+             if registry.spec(n).takes_forecaster]
+    for p in policies:
+        if not registry.spec(p).takes_forecaster:
+            raise TypeError(f"policy {p!r} takes no forecaster; "
+                            f"forecaster-aware policies: {aware}")
+    ctrls = [registry.get_controller(p, cfg, classify=classify,
+                                     forecaster=f, **overrides)
+             for f in forecasters for p in policies]
+    sim = make_batch_simulator(ctrls, cfg)
+    shape = (len(forecasters), len(policies))
+
+    def run(rates):
+        out = sim(jnp.asarray(rates))                 # [F*P, W, M]
+        return jax.tree.map(
+            lambda a: a.reshape(shape + a.shape[1:]), out)
+
+    return run
+
+
 def make_grid_simulator(name: str, grid: Sequence[dict],
                         cfg: SimConfig = SimConfig(), *,
                         classify=None, **fixed):

@@ -33,6 +33,9 @@ from repro.core import features as F
 from repro.core import forecasting as fc
 from repro.core import uncertainty
 from repro.core.archetypes import table_iii_arrays
+from repro.forecast import api as fapi
+from repro.forecast import conformal as fconf
+from repro.forecast import registry as forecast_registry
 from repro.scaling.api import Controller, Obs
 
 EPSF = 1e-9
@@ -83,21 +86,38 @@ def hpa_controller(cfg, *, target: float = 0.70,
 
 # --------------------------------------------------- Generic Predictive ----
 class PredState(NamedTuple):
-    hw: fc.HWState
+    fc: fapi.FState
+
+
+def _resolve_forecaster(forecaster, band):
+    """Name or Forecaster -> Forecaster, conformal-wrapped when a
+    calibrated band is supplied. Returns (forecaster, confidence_scale)."""
+    fcst = forecast_registry.make(forecaster)
+    if band is not None:
+        return fconf.wrap(fcst, band), band.scale
+    return fcst, None
 
 
 def predictive_controller(cfg, *, target: float = 0.70,
-                          horizon_min: int = 15, period: int = 60,
-                          cooldown_min: float = 5.0) -> Controller:
+                          horizon_min: int = 15,
+                          cooldown_min: float = 5.0,
+                          forecaster="holt_winters",
+                          band: fconf.ConformalBand | None = None,
+                          conservative: bool = False) -> Controller:
+    """Uniform predictive baseline over any registered forecaster.
+    `conservative=True` scales to the interval's upper bound instead of
+    the point forecast (pay replicas for forecast uncertainty)."""
+    fcst, _ = _resolve_forecaster(forecaster, band)
+
     def init():
-        return PredState(hw=fc.hw_init(period))
+        return PredState(fc=fcst.init())
 
     def on_minute(state: PredState, hist, minute_idx):
-        return PredState(hw=fc.hw_step(state.hw, hist[-1]))
+        return PredState(fc=fcst.update(state.fc, hist[-1]))
 
     def decide(state: PredState, obs: Obs):
-        pred_per_min = jnp.maximum(
-            fc.hw_forecast_max(state.hw, horizon_min), 0.0)
+        iv = fcst.forecast(state.fc, horizon_min)
+        pred_per_min = jnp.maximum(iv.hi if conservative else iv.point, 0.0)
         need_pred = pred_per_min / 60.0 / (cfg.rps_per_replica * target)
         need_now = obs.rate_rps / (cfg.rps_per_replica * target)
         desired = jnp.ceil(jnp.maximum(need_pred, need_now))
@@ -112,9 +132,9 @@ def predictive_controller(cfg, *, target: float = 0.70,
 
 # ------------------------------------------------------------------ AAPA ----
 class AAPAState(NamedTuple):
-    hw: fc.HWState
+    fc: fapi.FState         # named forecaster carry (PERIODIC strategy)
     arch: jax.Array         # int32 current archetype
-    conf: jax.Array         # f32 calibrated confidence
+    conf: jax.Array         # f32 effective confidence fed to Algorithm 1
     cpu_adj: jax.Array
     cool_adj_min: jax.Array
     minrep_adj: jax.Array
@@ -124,13 +144,29 @@ def aapa_controller(
         cfg,
         classify: Callable[[jax.Array], tuple[jax.Array, jax.Array]],
         *, stride_min: int = 10, horizon_min: int = 15,
-        period: int = 60) -> Controller:
+        forecaster="holt_winters",
+        band: fconf.ConformalBand | None = None,
+        forecast_confidence: bool | None = None) -> Controller:
     """`classify(features [38]) -> (class id int32, confidence f32)`,
-    typically GBDT + beta calibration (see ``repro.core.pipeline``)."""
+    typically GBDT + beta calibration (see ``repro.core.pipeline``).
+
+    The predictive strategy runs any registered forecaster (by name or
+    instance). When forecast confidence is on, Algorithm 1's confidence
+    is the classifier's calibrated confidence *times* the forecast
+    confidence — the forecaster's interval width mapped to [0, 1]
+    (split-conformal when a calibrated `band` is supplied, residual-EWMA
+    native band otherwise). Wide bands mean the forecast cannot be
+    trusted, so the adjustment gets more conservative exactly as
+    §III.C.3 prescribes. `forecast_confidence=None` (default) enables
+    the signal only when a calibrated `band` is present, so an
+    uncalibrated AAPA feeds the classifier signal alone."""
     tab = table_iii_arrays()
+    fcst, conf_scale = _resolve_forecaster(forecaster, band)
+    if forecast_confidence is None:
+        forecast_confidence = band is not None
 
     def init():
-        return AAPAState(hw=fc.hw_init(period),
+        return AAPAState(fc=fcst.init(),
                          arch=jnp.int32(2),          # start conservative
                          conf=jnp.float32(0.5),
                          cpu_adj=jnp.float32(0.5),
@@ -138,19 +174,22 @@ def aapa_controller(
                          minrep_adj=jnp.float32(1.0))
 
     def on_minute(state: AAPAState, hist, minute_idx):
-        hw = fc.hw_step(state.hw, hist[-1])
+        fst = fcst.update(state.fc, hist[-1])
 
         def reclassify(_):
             feats = F.extract_features(hist)
             arch, conf = classify(feats)
+            if forecast_confidence:
+                iv = fcst.forecast(fst, horizon_min)
+                conf = conf * fapi.interval_confidence(iv, conf_scale)
             adj = uncertainty.adjust(conf, tab["target_cpu"][arch],
                                      tab["cooldown_min"][arch],
                                      tab["min_replicas"][arch])
-            return AAPAState(hw, arch, conf, adj.target_cpu,
+            return AAPAState(fst, arch, conf, adj.target_cpu,
                              adj.cooldown_min, adj.min_replicas)
 
         def keep(_):
-            return state._replace(hw=hw)
+            return state._replace(fc=fst)
 
         do = (minute_idx % stride_min) == 0
         return jax.lax.cond(do, reclassify, keep, None)
@@ -168,9 +207,9 @@ def aapa_controller(
         need_now = jnp.ceil(obs.rate_rps / cap)
         spike_d = need_now + warm + state.minrep_adj
 
-        hw_pred = jnp.maximum(fc.hw_forecast_max(state.hw, horizon_min),
+        fc_pred = jnp.maximum(fcst.forecast(state.fc, horizon_min).point,
                               0.0) / 60.0
-        periodic_d = jnp.ceil(hw_pred / cap)
+        periodic_d = jnp.ceil(fc_pred / cap)
 
         trend_pred = fc.linear_trend_forecast(
             obs.rate_history[-30:], horizon_min) / 60.0

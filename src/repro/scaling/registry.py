@@ -28,6 +28,7 @@ class PolicySpec:
     defaults: dict[str, Any]
     stackable: tuple[str, ...] = ()      # kwargs that may be traced arrays
     needs_classifier: bool = False
+    takes_forecaster: bool = False       # accepts forecaster= by name
     description: str = ""
 
 
@@ -38,11 +39,13 @@ def register(name: str, factory: Callable[..., Controller], *,
              defaults: dict[str, Any] | None = None,
              stackable: tuple[str, ...] = (),
              needs_classifier: bool = False,
+             takes_forecaster: bool = False,
              description: str = "") -> None:
     if name in _REGISTRY:
         raise ValueError(f"policy {name!r} already registered")
     _REGISTRY[name] = PolicySpec(name, factory, dict(defaults or {}),
-                                 stackable, needs_classifier, description)
+                                 stackable, needs_classifier,
+                                 takes_forecaster, description)
 
 
 def available() -> list[str]:
@@ -79,6 +82,10 @@ def get_controller(name: str, cfg, *, classify=None,
     return sp.factory(cfg, **kw)
 
 
+#: Canonical spelling for new code: ``registry.make("aapa", cfg, ...)``.
+make = get_controller
+
+
 # ------------------------------------------------------ built-in catalog ----
 register(
     "hpa", P.hpa_controller,
@@ -90,18 +97,25 @@ register(
 
 register(
     "predictive", P.predictive_controller,
-    defaults=dict(target=0.70, horizon_min=15, period=60,
-                  cooldown_min=5.0),
+    defaults=dict(target=0.70, horizon_min=15, cooldown_min=5.0,
+                  forecaster="holt_winters", band=None,
+                  conservative=False),
     stackable=("target", "cooldown_min"),
-    description="Generic predictive: uniform Holt-Winters, 15-minute "
-                "horizon (paper §IV.C baseline).")
+    takes_forecaster=True,
+    description="Generic predictive over any repro.forecast registry "
+                "model (default Holt-Winters, 15-minute horizon — the "
+                "paper §IV.C baseline).")
 
 register(
     "aapa", P.aapa_controller,
-    defaults=dict(stride_min=10, horizon_min=15, period=60),
+    defaults=dict(stride_min=10, horizon_min=15,
+                  forecaster="holt_winters", band=None,
+                  forecast_confidence=None),
     needs_classifier=True,
+    takes_forecaster=True,
     description="Archetype-aware predictive autoscaler with uncertainty "
-                "quantification (the paper's system, §III).")
+                "quantification (the paper's system, §III); confidence = "
+                "classifier x forecast-interval signal.")
 
 register(
     "kpa", P.kpa_controller,
@@ -115,8 +129,10 @@ register(
 register(
     "hybrid", P.hybrid_controller,
     defaults=dict(guard_target=0.85, max_down_frac=0.3, stride_min=10,
-                  horizon_min=15, period=60),
+                  horizon_min=15, forecaster="holt_winters", band=None,
+                  forecast_confidence=None),
     stackable=("guard_target", "max_down_frac"),
     needs_classifier=True,
+    takes_forecaster=True,
     description="AAPA with a reactive guardrail floor and bounded "
                 "scale-down steps.")

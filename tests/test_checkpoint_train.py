@@ -13,6 +13,11 @@ from repro.train import optimizer as opt_lib
 from repro.train.train_step import make_train_step
 
 
+
+# Heavyweight model/train/system tier: nightly CI runs these; tier-1 deselects
+# with -m 'not slow'.
+pytestmark = pytest.mark.slow
+
 def _tree(seed=0):
     k = jax.random.PRNGKey(seed)
     return {"a": jax.random.normal(k, (4, 8)),

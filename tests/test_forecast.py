@@ -1,0 +1,283 @@
+"""The `repro.forecast` subsystem: registry round-trips, forecaster
+semantics, batched backtest parity, split-conformal coverage, the
+confidence path into Algorithm 1, and the forecasters x policies x
+workloads batched simulation (bit-exact vs the per-forecaster path)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import forecasting as fc
+from repro.core import uncertainty
+from repro.data.azure_synth import generate_traces
+from repro.forecast import (Forecaster, backtest, conformal,
+                            interval_confidence, registry)
+from repro.forecast.api import FState
+from repro.core.archetypes import Archetype
+
+
+# ------------------------------------------------------------- registry ----
+def test_registry_round_trips_every_forecaster():
+    for name in registry.available():
+        f = registry.make(name)
+        assert isinstance(f, Forecaster) and f.name == name
+        st = f.init()
+        assert isinstance(st, FState)
+        for v in (5.0, 9.0, 4.0, 12.0):
+            st = f.update(st, jnp.float32(v))
+        iv = f.forecast(st, 15)
+        assert float(iv.lo) <= float(iv.point) <= float(iv.hi)
+        assert float(iv.lo) >= 0.0
+
+
+def test_registry_rejects_unknown_names_and_params():
+    with pytest.raises(KeyError):
+        registry.make("oracle")
+    with pytest.raises(TypeError):
+        registry.make("ewma", period=60)
+    # instances pass through, but can't be re-parameterized
+    f = registry.make("ewma")
+    assert registry.make(f) is f
+    with pytest.raises(TypeError):
+        registry.make(f, alpha=0.5)
+
+
+def test_archetype_defaults_cover_every_archetype():
+    for arch in Archetype:
+        name = registry.for_archetype(arch)
+        assert name in registry.available()
+    assert registry.for_archetype(Archetype.RAMP) == "linear_trend"
+    assert registry.for_archetype(Archetype.PERIODIC) == "holt_winters"
+
+
+# --------------------------------------------------- forecaster semantics ----
+def test_linear_trend_forecaster_exact_on_line():
+    f = registry.make("linear_trend", window=30)
+    st = f.init()
+    for v in 10.0 + 3.0 * np.arange(30):
+        st = f.update(st, jnp.float32(v))
+    iv = f.forecast(st, 10)
+    # increasing line: peak over the horizon is the endpoint forecast
+    assert float(iv.point) == pytest.approx(10.0 + 3.0 * 39, rel=1e-4)
+
+
+def test_seasonal_naive_repeats_the_cycle():
+    period = 12
+    f = registry.make("seasonal_naive", period=period)
+    st = f.init()
+    cycle = 50.0 + 40.0 * np.sin(2 * np.pi * np.arange(period) / period)
+    for _ in range(3):
+        for v in cycle:
+            st = f.update(st, jnp.float32(v))
+    # peak over one full period = the cycle's max
+    iv = f.forecast(st, period)
+    assert float(iv.point) == pytest.approx(cycle.max(), rel=1e-5)
+
+
+def test_ewma_converges_to_level_with_tight_band():
+    f = registry.make("ewma", alpha=0.5)
+    st = f.init()
+    for _ in range(80):
+        st = f.update(st, jnp.float32(42.0))
+    iv = f.forecast(st, 15)
+    assert float(iv.point) == pytest.approx(42.0, rel=1e-3)
+    # constant input -> residual EWMA ~ 0 -> near-degenerate interval
+    assert float(iv.hi - iv.lo) < 1.0
+    assert float(interval_confidence(iv)) > 0.95
+
+
+def test_native_interval_widens_with_noise_and_horizon():
+    rng = np.random.default_rng(0)
+    f = registry.make("ewma")
+    st_lo, st_hi = f.init(), f.init()
+    for _ in range(200):
+        st_lo = f.update(st_lo, jnp.float32(100.0 + rng.normal(0, 1)))
+        st_hi = f.update(st_hi, jnp.float32(100.0 + rng.normal(0, 25)))
+    w = lambda iv: float(iv.hi - iv.lo)
+    assert w(f.forecast(st_hi, 1)) > w(f.forecast(st_lo, 1))
+    assert w(f.forecast(st_hi, 16)) > w(f.forecast(st_hi, 1))
+    c_lo = float(interval_confidence(f.forecast(st_lo, 1)))
+    c_hi = float(interval_confidence(f.forecast(st_hi, 1)))
+    assert c_lo > c_hi  # noisier series -> lower forecast confidence
+
+
+# ------------------------------------------------------ batched backtest ----
+def test_batch_backtest_bit_exact_vs_per_forecaster():
+    rng = np.random.default_rng(3)
+    y = rng.gamma(2.0, 10.0, size=(5, 240)).astype(np.float32)
+    names = registry.available()
+    out = backtest.batch_smooth(names, y)              # [F, B, T]
+    assert out.shape == (len(names), 5, 240)
+    for i, name in enumerate(names):
+        single = backtest.stream_smooth(name, y)
+        np.testing.assert_array_equal(np.asarray(out[i]),
+                                      np.asarray(single),
+                                      err_msg=name)
+
+
+def test_smooth_matches_stream_path_for_scan_forecasters():
+    """Forecasters without a custom offline kernel path must have
+    `smooth` == the streaming scan exactly."""
+    rng = np.random.default_rng(4)
+    y = rng.gamma(2.0, 10.0, size=(3, 180)).astype(np.float32)
+    for name in ("ewma", "linear_trend", "seasonal_naive"):
+        f = registry.make(name)
+        np.testing.assert_array_equal(
+            np.asarray(f.smooth(jnp.asarray(y))),
+            np.asarray(backtest.stream_smooth(f, y)), err_msg=name)
+
+
+def test_hw_smooth_dispatch_matches_kernel_oracle():
+    """On CPU the HW forecaster's offline path is the hw_smooth oracle —
+    the same function the Pallas kernel is validated against."""
+    rng = np.random.default_rng(5)
+    y = rng.gamma(2.0, 5.0, size=(4, 300)).astype(np.float32)
+    f = registry.make("holt_winters", period=24)
+    got = np.asarray(f.smooth(jnp.asarray(y)))
+    want = np.asarray(fc.hw_smooth(jnp.asarray(y), period=24))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hw_smooth_reuses_one_compile_across_series_lengths():
+    """Mixed-length backtests must not retrace per length: series pad to
+    a 256 bucket, so 100/130/250 all share one compilation."""
+    from repro.core.forecasting import _hw_smooth_padded
+    rng = np.random.default_rng(6)
+    outs = {}
+    before = _hw_smooth_padded._cache_size()
+    for T in (100, 130, 250):
+        y = rng.gamma(2.0, 5.0, size=(2, T)).astype(np.float32)
+        outs[T] = np.asarray(fc.hw_smooth(jnp.asarray(y), period=24))
+        assert outs[T].shape == (2, T)
+    grown = _hw_smooth_padded._cache_size() - before
+    assert grown <= 1, f"retraced per length: {grown} new compilations"
+    # padding must not change the causal prefix
+    y = rng.gamma(2.0, 5.0, size=(2, 100)).astype(np.float32)
+    direct = np.asarray(_hw_smooth_padded(
+        jnp.asarray(np.pad(y, ((0, 0), (0, 156)))), jnp.float32(0.1),
+        jnp.float32(0.01), jnp.float32(0.3), period=24))[:, :100]
+    np.testing.assert_array_equal(
+        np.asarray(fc.hw_smooth(jnp.asarray(y), period=24)), direct)
+
+
+# -------------------------------------------------------------- conformal ----
+@pytest.fixture(scope="module")
+def stationary_traces():
+    traces = generate_traces(n_functions=12, n_days=1, seed=99,
+                             mix={Archetype.STATIONARY_NOISY: 1.0})
+    return traces.counts          # [12, 1440]
+
+
+@pytest.mark.parametrize("alpha", [0.8, 0.9, 0.95])
+def test_conformal_coverage_near_nominal(stationary_traces, alpha):
+    """Split-conformal bands hit their nominal coverage within +-5 pts
+    on held-out halves of stationary Azure-like traces."""
+    f = registry.make("ewma")
+    calib = stationary_traces[:, :720]
+    test = stationary_traces[:, 720:]
+    band = conformal.calibrate(f, calib, alpha=alpha)
+    cov = conformal.coverage(f, band, test)
+    assert abs(cov - alpha) <= 0.05, (cov, alpha)
+
+
+def test_conformal_band_feeds_interval_and_confidence(stationary_traces):
+    f = registry.make("ewma")
+    lo = conformal.calibrate(f, stationary_traces, alpha=0.5)
+    hi = conformal.calibrate(f, stationary_traces, alpha=0.95)
+    assert float(hi.q) > float(lo.q)          # wider band at higher alpha
+    # lower alpha -> narrower band -> higher confidence
+    assert float(conformal.confidence(lo)) > float(conformal.confidence(hi))
+
+    wrapped = conformal.wrap(f, hi)
+    st = wrapped.init()
+    for v in stationary_traces[0, :120]:
+        st = wrapped.update(st, jnp.float32(v))
+    iv1 = wrapped.forecast(st, 1)
+    iv9 = wrapped.forecast(st, 9)
+    assert float(iv1.hi - iv1.point) == pytest.approx(float(hi.q), rel=1e-5)
+    # sqrt-horizon widening: 9 steps -> 3x the one-step half-width
+    assert float(iv9.hi - iv9.point) == pytest.approx(3 * float(hi.q),
+                                                      rel=1e-5)
+
+
+def test_margin_multiplier_monotone_under_decreasing_confidence():
+    cs = jnp.linspace(1.0, 0.0, 21)
+    ms = np.asarray(uncertainty.margin_multiplier(cs))
+    assert (np.diff(ms) >= -1e-7).all()       # conf down -> margin up
+    assert ms[0] == pytest.approx(1.0) and ms[-1] == pytest.approx(1.5)
+
+
+def test_interval_confidence_monotone_in_width():
+    from repro.forecast.api import Interval
+    point = jnp.float32(100.0)
+    widths = [0.0, 10.0, 50.0, 200.0]
+    cs = [float(interval_confidence(
+        Interval(point, point - w / 2, point + w / 2))) for w in widths]
+    assert cs[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(cs, cs[1:]))
+    assert all(0.0 <= c <= 1.0 for c in cs)
+
+
+# --------------------------------------- wired into the control plane ----
+def test_aapa_scales_with_named_forecaster_and_conformal_confidence(
+        stationary_traces):
+    """Acceptance: registry.make("aapa") runs end-to-end with a named
+    forecaster + conformal band, and the band's width actually modulates
+    Algorithm 1 (conf = classifier x interval signal)."""
+    from repro.scaling import registry as scaling_registry
+    from repro.sim.cluster import SimConfig, simulate
+
+    cfg = SimConfig()
+    f = registry.make("ewma")
+    band = conformal.calibrate(f, stationary_traces[:, :720], alpha=0.9)
+    ctrl = scaling_registry.make("aapa", cfg, forecaster="ewma", band=band)
+    out = simulate(jnp.asarray(stationary_traces[0]), ctrl, cfg)
+    assert float(out.served.sum()) > 0
+
+    # eager wiring check: drive on_minute to a reclassify boundary
+    ctrl_plain = scaling_registry.make("aapa", cfg, forecaster="ewma",
+                                       forecast_confidence=False)
+    hist = jnp.asarray(stationary_traces[0, :60])
+    st_band = ctrl.init()
+    st_plain = ctrl_plain.init()
+    for m in range(1, 21):
+        st_band = ctrl.on_minute(st_band, hist, jnp.int32(m))
+        st_plain = ctrl_plain.on_minute(st_plain, hist, jnp.int32(m))
+    # default classifier confidence is 0.5; the conformal path multiplies
+    # by the interval signal in (0, 1), the plain path does not
+    assert float(st_plain.conf) == pytest.approx(0.5)
+    assert 0.0 < float(st_band.conf) < 0.5
+    expected = 0.5 * float(interval_confidence(
+        conformal.wrap(f, band).forecast(st_band.fc, 15), band.scale))
+    assert float(st_band.conf) == pytest.approx(expected, rel=1e-5)
+
+
+def test_forecast_batch_simulator_bit_exact():
+    """Acceptance: forecasters x policies x workloads in one jitted scan,
+    bit-exact against each per-forecaster standalone simulation."""
+    from repro.scaling import batch, registry as scaling_registry
+    from repro.sim.cluster import SimConfig, make_simulator
+
+    cfg = SimConfig()
+    rng = np.random.default_rng(7)
+    rates = jnp.asarray(rng.poisson(900, (2, 75)).astype(np.float32))
+    fore = ("holt_winters", "ewma", "linear_trend")
+    pols = ("predictive", "aapa")
+    out = batch.make_forecast_batch_simulator(pols, fore, cfg)(rates)
+    assert out.served.shape == (3, 2, 2, 75)
+    for fi, f in enumerate(fore):
+        for pi, p in enumerate(pols):
+            single = make_simulator(
+                scaling_registry.make(p, cfg, forecaster=f), cfg)(rates)
+            for field in ("served", "violated", "replica_seconds",
+                          "ready_mean"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(out, field)[fi, pi]),
+                    np.asarray(getattr(single, field)),
+                    err_msg=f"{f}/{p}.{field}")
+
+
+def test_forecast_batch_simulator_rejects_forecasterless_policy():
+    from repro.scaling import batch
+    with pytest.raises(TypeError):
+        batch.make_forecast_batch_simulator(("hpa",), ("ewma",))

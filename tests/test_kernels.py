@@ -6,6 +6,10 @@ import pytest
 from repro.kernels import ops, ref
 
 
+# 24-point interpret-mode sweep (~90 s on CPU): nightly tier. Tier-1
+# keeps kernel/oracle parity via test_kernel_properties.py's randomized
+# shapes plus the tile-invariance and fused-pipeline tests below.
+@pytest.mark.slow
 @pytest.mark.parametrize("n", [1, 7, 256, 300])
 @pytest.mark.parametrize("w", [60, 48, 64])
 @pytest.mark.parametrize("dtype", [np.float32, np.float64])

@@ -8,6 +8,11 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.models import model as M
 
+
+# Heavyweight model/train/system tier: nightly CI runs these; tier-1 deselects
+# with -m 'not slow'.
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

@@ -109,6 +109,32 @@ def test_scenarios_shapes_and_sweeps():
         assert s.rates.shape[0] == 2 and s.rates.shape[1] == 60
 
 
+def test_rps_per_replica_sweep_varies_only_the_plant():
+    swept = scenarios.rps_per_replica_sweep(values=(5.0, 40.0),
+                                            base="archetype_mix",
+                                            n_workloads=2, minutes=60)
+    assert [s.cfg.rps_per_replica for s in swept] == [5.0, 40.0]
+    assert [s.meta["rps_per_replica"] for s in swept] == [5.0, 40.0]
+    np.testing.assert_array_equal(swept[0].rates, swept[1].rates)
+    # smaller per-replica capacity must need at least as many replicas
+    ctrl = lambda cfg: registry.get_controller("hpa", cfg)
+    rep = [float(simulate(jnp.asarray(s.rates[0]), ctrl(s.cfg),
+                          s.cfg).replica_seconds.sum()) for s in swept]
+    assert rep[0] >= rep[1]
+
+
+def test_startup_sweep_shifts_cold_starts():
+    swept = scenarios.startup_sweep(values=(5, 120), base="idle_wake",
+                                    n_workloads=1, minutes=120, seed=5)
+    cold = []
+    for s in swept:
+        out = simulate(jnp.asarray(s.rates[0]),
+                       registry.get_controller("hpa", s.cfg), s.cfg)
+        cold.append(float(out.cold_starts.sum()))
+    # slower pod startup can only make wake-from-zero cold starts worse
+    assert cold[1] >= cold[0]
+
+
 def test_archetype_pure_scenario_is_pure():
     sc = scenarios.get("archetype_pure", kind="SPIKE", n_workloads=3,
                        minutes=1440, seed=2)
@@ -147,6 +173,7 @@ def engine_parts():
     return cfg, params
 
 
+@pytest.mark.slow
 def test_adapter_matches_sim_steady_state(engine_parts):
     """Constant-rate trace: the engine driven through the adapter and the
     cluster sim driven by the same hpa controller + SimConfig converge to
@@ -209,6 +236,111 @@ def test_scale_to_zero_agrees_across_backends():
     for _ in range(40):               # drain the stable window EMA
         state, desired, _ = ctrl.decide(state, idle_obs)
     assert float(desired) == 0.0
+
+
+class FakeEngine:
+    """Duck-typed stand-in for ServingEngine: just the attributes the
+    adapter senses and the `scale_to` actuator, with manual time."""
+
+    def __init__(self, *, ready=2, lanes=2, startup_s=6.0, slo_s=1.0,
+                 max_replicas=10):
+        self.ready_replicas = ready
+        self.lanes = lanes
+        self.startup_s = startup_s
+        self.slo_s = slo_s
+        self.max_replicas = max_replicas
+        self.starting, self.active, self.queue = [], [], []
+        self.t = 0.0
+        self.arrivals_total = 0
+        self.rate = 0.0
+        self.scale_calls = []
+
+    def observed_rate(self, window_s):
+        return self.rate
+
+    def scale_to(self, n):
+        self.scale_calls.append(n)
+        self.ready_replicas = n
+
+
+def test_sim_config_for_engine_converts_to_logical_units():
+    from repro.scaling import adapter
+    eng = FakeEngine(ready=3, lanes=4, startup_s=6.0, slo_s=1.0)
+    # 1 logical minute = 2 engine-seconds -> 30 logical sec per engine sec
+    cfg = adapter.sim_config_for_engine(eng, minute_s=2.0, service_s=0.4)
+    assert cfg.startup_sec == 180            # 6 engine-s x 30
+    assert cfg.service_sec == pytest.approx(0.4 * 30)
+    assert cfg.slo_sec == pytest.approx(30.0)
+    assert cfg.rps_per_replica == pytest.approx(4 / (0.4 * 30))
+    assert cfg.initial_replicas == 3.0
+    # identity mapping at minute_s=60
+    cfg60 = adapter.sim_config_for_engine(eng, minute_s=60.0, service_s=0.4)
+    assert cfg60.startup_sec == 6 and cfg60.service_sec == pytest.approx(0.4)
+
+
+def test_adapter_cooldown_blocks_scale_down_in_logical_time():
+    """A decide() cooldown is logical seconds; with minute_s=2 the
+    adapter must hold a second scale-down for cooldown/30 engine-seconds."""
+    import jax.numpy as jnp
+    from repro.scaling import adapter
+
+    def shrinker(cfg):
+        def init():
+            return jnp.float32(0.0)
+        def on_minute(state, hist, minute_idx):
+            return state
+        def decide(state, obs):
+            return state, obs.ready_total - 1.0, jnp.float32(120.0)
+        return api.Controller("shrinker", init, on_minute, decide)
+
+    eng = FakeEngine(ready=8)
+    minute_s = 2.0
+    cfg = adapter.sim_config_for_engine(eng, minute_s=minute_s,
+                                        control_interval_sec=15)
+    auto = adapter.EngineAutoscaler(eng, shrinker(cfg), cfg,
+                                    minute_s=minute_s)
+    # control fires every 15 logical s = 0.5 engine s
+    for step in range(1, 9):
+        eng.t = step * 0.25
+        auto.on_tick()
+    # first decision scales 8 -> 7 and starts a 120-logical-s cooldown
+    # (= 4 engine s); every later decision within that window is blocked
+    assert eng.scale_calls[0] == 7
+    assert all(c == 7 for c in eng.scale_calls), eng.scale_calls
+    assert auto.last_cooldown_s == pytest.approx(120.0)
+    # past the cooldown (4 engine-s later) the next shrink goes through
+    # (the clock drains on the first post-expiry decision, which unblocks
+    # the one after — the same pre-decay check the simulator compiles)
+    eng.t = 4.0 + 0.5
+    auto.on_tick()
+    eng.t = 5.0
+    auto.on_tick()
+    assert eng.scale_calls[-1] == 6
+
+
+def test_adapter_scales_to_zero_on_idle_engine():
+    from repro.scaling import adapter
+    eng = FakeEngine(ready=2)
+    auto = adapter.EngineAutoscaler.from_policy(
+        eng, "hpa", minute_s=1.0, cooldown_min=0.0)
+    # idle engine: no traffic, empty queue; util EMA decays to ~0
+    for step in range(1, 80):
+        eng.t = step * 0.25
+        auto.on_tick()
+    assert eng.scale_calls[-1] == 0
+    assert eng.ready_replicas == 0
+
+
+def test_adapter_from_policy_resolves_forecaster():
+    from repro.scaling import adapter
+    eng = FakeEngine(ready=2)
+    auto = adapter.EngineAutoscaler.from_policy(eng, "predictive",
+                                                forecaster="ewma",
+                                                minute_s=1.0)
+    eng.rate = 5.0
+    eng.t = 0.25
+    auto.on_tick()
+    assert auto.last_desired >= 1.0
 
 
 def test_metrics_on_batched_output():

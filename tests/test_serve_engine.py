@@ -7,6 +7,11 @@ from repro.models import model as M
 from repro.serve.engine import Request, ServingEngine
 
 
+
+# Heavyweight model/train/system tier: nightly CI runs these; tier-1 deselects
+# with -m 'not slow'.
+pytestmark = pytest.mark.slow
+
 @pytest.fixture(scope="module")
 def engine_parts():
     cfg = smoke_config(get_config("internlm2_1_8b"))

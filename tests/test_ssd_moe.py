@@ -9,6 +9,10 @@ from repro.models.moe import init_moe, moe_block_scatter, moe_capacity
 from repro.models.ssm import (init_mamba2, init_ssm_cache, mamba2_block,
                               ssd_chunked, ssd_decode_step)
 
+# Heavyweight model/train/system tier: nightly CI runs these; tier-1 deselects
+# with -m 'not slow'.
+pytestmark = pytest.mark.slow
+
 
 def _ssd_inputs(seed=0, B=2, L=32, H=3, P=5, N=7):
     rng = np.random.default_rng(seed)

@@ -12,6 +12,11 @@ from repro.sim import metrics as MM
 from repro.sim.cluster import SimConfig, make_simulator
 
 
+
+# Heavyweight model/train/system tier: nightly CI runs these; tier-1 deselects
+# with -m 'not slow'.
+pytestmark = pytest.mark.slow
+
 @pytest.fixture(scope="module")
 def mini():
     traces = generate_traces(n_functions=24, n_days=4, seed=7)
