@@ -1,44 +1,45 @@
-"""Shared benchmark infrastructure: the paper-scale dataset + trained
-classifier, cached under experiments/cache so every table reuses them."""
+"""Shared benchmark infrastructure: the paper-scale AAPAset artifact +
+trained classifier, content-addressed under experiments/aapaset so every
+table names (and reuses) the exact dataset it ran on."""
 from __future__ import annotations
 
 import json
 import pathlib
-import pickle
 import time
 
-
+from repro import aapaset
 from repro.core import gbdt, pipeline
-from repro.data.azure_synth import generate_traces
 
-CACHE = pathlib.Path("experiments/cache")
 BENCH_OUT = pathlib.Path("experiments/bench")
 
-# paper §IV.A scale: 300K windows. 200 functions x 14 days ~= 390K windows
-N_FUNCTIONS = 200
-N_DAYS = 14
-SEED = 0
+# paper §IV.A scale: the ~300K-window registry artifact
+BENCH_DATASET = "aapaset_300k"
+
+_LOADER: aapaset.AAPAsetLoader | None = None
 
 
-def get_traces():
-    return generate_traces(n_functions=N_FUNCTIONS, n_days=N_DAYS,
-                           seed=SEED)
+def get_loader() -> aapaset.AAPAsetLoader:
+    """Build-or-load the paper-scale artifact, shared process-wide so a
+    bench that needs both the classifier and the arrays loads the shards
+    once."""
+    global _LOADER
+    if _LOADER is None:
+        t0 = time.time()
+        _LOADER = aapaset.AAPAsetLoader.from_name(BENCH_DATASET)
+        print(f"# dataset {_LOADER.dataset_id} ready in "
+              f"{time.time()-t0:.0f}s "
+              f"({_LOADER.manifest['card']['n_windows']} windows)")
+    return _LOADER
 
 
 def get_trained(verbose: bool = False) -> pipeline.TrainedAAPA:
-    CACHE.mkdir(parents=True, exist_ok=True)
-    pkl = CACHE / f"aapa_{N_FUNCTIONS}x{N_DAYS}_s{SEED}.pkl"
-    if pkl.exists():
-        with open(pkl, "rb") as f:
-            return pickle.load(f)
     t0 = time.time()
-    trained = pipeline.train_aapa(get_traces(),
-                                  gbdt.GBDTConfig(n_rounds=60),
-                                  verbose=verbose)
-    print(f"# trained AAPA in {time.time()-t0:.0f}s "
-          f"(test_acc={trained.test_acc:.4f})")
-    with open(pkl, "wb") as f:
-        pickle.dump(trained, f)
+    trained = pipeline.train_classifier(BENCH_DATASET,
+                                        gbdt.GBDTConfig(n_rounds=60),
+                                        verbose=verbose,
+                                        loader_factory=get_loader)
+    print(f"# classifier on {trained.dataset_id} ready in "
+          f"{time.time()-t0:.0f}s (test_acc={trained.test_acc:.4f})")
     return trained
 
 

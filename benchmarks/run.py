@@ -7,11 +7,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_autoscaling, bench_classification,
-                            bench_labeling, bench_latency,
-                            bench_pipeline_perf, bench_rei, bench_roofline,
-                            bench_uncertainty)
+    from benchmarks import (bench_aapaset, bench_autoscaling,
+                            bench_classification, bench_labeling,
+                            bench_latency, bench_pipeline_perf, bench_rei,
+                            bench_roofline, bench_uncertainty)
     benches = [
+        ("aapaset", bench_aapaset),
         ("labeling", bench_labeling),
         ("classification", bench_classification),
         ("latency", bench_latency),

@@ -1,4 +1,5 @@
-"""Weak-supervision deep-dive: labeling-function behaviour, confusion
+"""Weak-supervision deep-dive on a named AAPAset artifact:
+labeling-function behaviour (straight off the dataset card), confusion
 matrix, calibration quality.
 
     PYTHONPATH=src python examples/classify_workloads.py
@@ -6,33 +7,30 @@ matrix, calibration quality.
 import numpy as np
 import jax.numpy as jnp
 
+from repro.aapaset.loader import AAPAsetLoader
 from repro.core import calibration, gbdt, pipeline
-from repro.core import labeling as L
 from repro.core.archetypes import ARCHETYPE_NAMES
-from repro.data import windows as W
-from repro.data.azure_synth import generate_traces
 
 
 def main():
-    traces = generate_traces(n_functions=40, n_days=5, seed=3)
-    ds = W.make_windows(traces)
-    X, y, conf = pipeline.featurize_and_label(ds)
-    print(f"windows={len(ds)}  abstain={np.mean(y < 0):.3f}")
+    loader = AAPAsetLoader.from_name("aapaset_ci")
+    card = loader.manifest["card"]
+    print(f"dataset {loader.dataset_id}: windows={card['n_windows']}  "
+          f"abstain={card['abstain_rate']:.3f}  "
+          f"conflict={card['lf_conflict_rate']:.3f}")
 
-    votes = np.asarray(L.apply_lfs(jnp.asarray(X[:20000])))
     print("\nper-LF coverage (fraction of windows fired):")
-    for fn, cov in zip(L.LABELING_FUNCTIONS,
-                       (votes >= 0).mean(axis=0)):
-        print(f"  {fn.__name__:28s} {cov:.3f}")
+    for name, cov in card["lf_coverage"].items():
+        print(f"  {name:28s} {cov:.3f}")
 
-    trained = pipeline.train_aapa(traces, gbdt.GBDTConfig(n_rounds=25))
-    split = W.day_split(ds)
-    m = split["test"] & (y >= 0)
-    pred = np.asarray(gbdt.predict(trained.params, jnp.asarray(X[m])))
+    trained = pipeline.train_from_loader(loader,
+                                         gbdt.GBDTConfig(n_rounds=25))
+    X, y, _ = loader.arrays("test")
+    pred = np.asarray(gbdt.predict(trained.params, jnp.asarray(X)))
     conf_mat = np.zeros((4, 4), int)
-    for t, p in zip(y[m], pred):
+    for t, p in zip(y, pred):
         conf_mat[t, p] += 1
-    print(f"\ntest accuracy = {(pred == y[m]).mean():.4f} (paper: 0.998)")
+    print(f"\ntest accuracy = {(pred == y).mean():.4f} (paper: 0.998)")
     print("confusion matrix (rows = true):")
     header = "".join(f"{n[:6]:>8s}" for n in ARCHETYPE_NAMES)
     print(f"  {'':18s}{header}")
@@ -40,11 +38,11 @@ def main():
         print(f"  {name:18s}" + "".join(f"{v:8d}" for v in row))
 
     probs = np.asarray(gbdt.predict_proba(trained.params,
-                                          jnp.asarray(X[m])))
-    ece_raw = calibration.expected_calibration_error(probs, y[m])
+                                          jnp.asarray(X)))
+    ece_raw = calibration.expected_calibration_error(probs, y)
     cal = np.asarray(calibration.calibrate(trained.cal,
                                            jnp.asarray(probs)))
-    ece_cal = calibration.expected_calibration_error(cal, y[m])
+    ece_cal = calibration.expected_calibration_error(cal, y)
     print(f"\nECE raw={ece_raw:.4f} -> beta-calibrated={ece_cal:.4f}")
 
 

@@ -15,7 +15,6 @@ from repro.configs import get_config, smoke_config
 from repro.core import gbdt, pipeline
 from repro.core.archetypes import ARCHETYPE_NAMES
 from repro.models import model as M
-from repro.data.azure_synth import generate_traces
 from repro.scaling import adapter, registry
 from repro.serve.engine import Request, ServingEngine
 
@@ -72,11 +71,12 @@ def main():
     cfg = smoke_config(get_config("stablelm_1_6b"))
     params = M.init(jax.random.PRNGKey(0), cfg)
 
-    print("== train archetype classifier ==")
-    traces = generate_traces(n_functions=24, n_days=4, seed=5)
-    trained = pipeline.train_aapa(traces,
-                                  gbdt.GBDTConfig(n_rounds=15, depth=3))
-    print(f"   classifier test acc = {trained.test_acc:.4f}")
+    print("== load archetype classifier (trains + caches on first run) ==")
+    # npz-cached next to the aapaset_ci artifact: reruns skip the fit
+    trained = pipeline.train_classifier(
+        "aapaset_ci", gbdt.GBDTConfig(n_rounds=15, depth=3))
+    print(f"   classifier on {trained.dataset_id}: "
+          f"test acc = {trained.test_acc:.4f}")
 
     # bursty arrival trace: quiet -> spike -> quiet
     rates = np.full(args.minutes, 60.0)

@@ -1,0 +1,20 @@
+"""AAPAset: the paper's 300K weakly labeled window dataset as a scalable
+engine — chunked jitted build, content-addressed shard cache, named
+dataset registry, and sharded loaders (paper §III.B, §IV.A).
+
+    from repro import aapaset
+    loader = aapaset.AAPAsetLoader.from_name("aapaset_ci")
+    X, y, conf = loader.arrays("train")
+"""
+from repro.aapaset.build import BuiltDataset, featurize_windows
+from repro.aapaset.loader import AAPAsetLoader
+from repro.aapaset.manifest import (DEFAULT_ROOT, DatasetConfig,
+                                    build_or_load, config_hash,
+                                    dataset_card, is_cached, read_manifest)
+from repro.aapaset.registry import available, get, register
+
+__all__ = [
+    "AAPAsetLoader", "BuiltDataset", "DatasetConfig", "DEFAULT_ROOT",
+    "available", "build_or_load", "config_hash", "dataset_card",
+    "featurize_windows", "get", "is_cached", "read_manifest", "register",
+]

@@ -1,0 +1,146 @@
+"""Chunked, jitted AAPAset builder: traces -> windows -> 38 features ->
+10-LF weak labels + agreement confidence -> day splits (paper §III.B).
+
+The seed-state path (`core.pipeline.featurize_and_label`) ran a host
+list-append loop with a fresh dispatch per variable-size batch. Here the
+whole per-window computation — feature extraction (Pallas
+``window_features_kernel`` when a TPU backend is attached, the pure-jnp
+``kernels.ref`` oracle math on CPU) plus LF voting and majority
+aggregation — is ONE jitted fixed-chunk-size step. Every chunk of every
+dataset reuses the same compilation (the
+last chunk is zero-padded to the chunk shape; compile-cache growth is
+pinned by test), and the window buffer is sharded over the
+``repro.dist.sharding`` "dp" axis when a mesh is active (no-op without).
+
+The output is bit-exact with the legacy host-loop path (pinned by test):
+all math is per-window, so chunking and padding cannot change any valid
+row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core import labeling
+from repro.data import windows as W
+from repro.data.azure_synth import generate_traces
+from repro.dist import sharding as shd
+
+DEFAULT_CHUNK = 8192
+SPLIT_NAMES = ("train", "val", "test")
+
+
+@dataclasses.dataclass
+class BuiltDataset:
+    """Materialized AAPAset: window tensors + weak labels + provenance.
+
+    `split` codes rows 0/1/2 = train/val/test (``SPLIT_NAMES``); `votes`
+    keeps the raw per-LF outputs so dataset cards can report coverage and
+    conflict without re-running the LFs.
+    """
+
+    windows: np.ndarray      # [N, W] f32 per-minute invocation counts
+    features: np.ndarray     # [N, 38] f32
+    labels: np.ndarray       # [N] int32 in {-1, 0..3} (-1 = all abstained)
+    confidence: np.ndarray   # [N] f32 LF agreement fraction
+    votes: np.ndarray        # [N, N_LFS] int8 raw LF outputs
+    func_id: np.ndarray      # [N] int32
+    start_min: np.ndarray    # [N] int32
+    pattern: np.ndarray      # [N] int32 generator ground truth
+    day: np.ndarray          # [N] int32 1-based day of window end
+    split: np.ndarray        # [N] int8 0/1/2 = train/val/test
+    series: np.ndarray       # [F_active, T] f32 counts of kept functions
+    series_pattern: np.ndarray  # [F_active] int32
+
+    def __len__(self):
+        return self.windows.shape[0]
+
+    def split_mask(self, name: str) -> np.ndarray:
+        return self.split == SPLIT_NAMES.index(name)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _build_chunk(wb: jax.Array, *, use_kernel: bool):
+    """One fixed-shape chunk step: windows [C, W] -> (features [C, 38],
+    labels [C], confidence [C], votes [C, N_LFS])."""
+    wb = shd.constrain(wb, ("dp", None))
+    if use_kernel:
+        from repro.kernels import ops
+        feats = ops.extract_features_fused(wb, interpret=False)
+    else:
+        feats = F.extract_features(wb)
+    # keep the LF stage from fusing into (and renumbering) the feature
+    # stage: features must stay bit-exact with the standalone
+    # extract_features path
+    feats = jax.lax.optimization_barrier(feats)
+    votes = labeling.apply_lfs(feats)
+    labels, conf, _ = labeling.majority_vote(votes)
+    return feats, labels, conf, votes.astype(jnp.int8)
+
+
+def featurize_windows(windows: np.ndarray, *, chunk: int = DEFAULT_CHUNK,
+                      use_kernel: bool | None = None):
+    """Extract 38 features + weak labels + LF votes for every window.
+
+    Returns (features [N, 38], labels [N], confidence [N],
+    votes [N, N_LFS]) as host arrays. One compilation per (chunk, W)
+    shape regardless of dataset size.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    windows = np.asarray(windows, np.float32)
+    N, width = windows.shape
+
+    feats = np.empty((N, F.N_FEATURES), np.float32)
+    labels = np.empty((N,), np.int32)
+    conf = np.empty((N,), np.float32)
+    votes = np.empty((N, labeling.N_LFS), np.int8)
+    for lo in range(0, N, chunk):
+        hi = min(lo + chunk, N)
+        wb = windows[lo:hi]
+        if hi - lo < chunk:               # zero-pad the tail chunk
+            wb = np.concatenate(
+                [wb, np.zeros((chunk - (hi - lo), width), np.float32)])
+        fb, lb, cb, vb = _build_chunk(jnp.asarray(wb),
+                                      use_kernel=use_kernel)
+        n = hi - lo
+        feats[lo:hi] = np.asarray(fb)[:n]
+        labels[lo:hi] = np.asarray(lb)[:n]
+        conf[lo:hi] = np.asarray(cb)[:n]
+        votes[lo:hi] = np.asarray(vb)[:n]
+    return feats, labels, conf, votes
+
+
+def build(cfg) -> BuiltDataset:
+    """Full build for one `manifest.DatasetConfig`: generate traces, slice
+    windows, run the chunked featurize/label step, assign day splits."""
+    traces = generate_traces(n_functions=cfg.n_functions,
+                             n_days=cfg.n_days, seed=cfg.seed,
+                             family=cfg.family)
+    ds = W.make_windows(traces, window=cfg.window, stride=cfg.stride,
+                        min_total_invocations=cfg.min_total_invocations)
+    feats, labels, conf, votes = featurize_windows(
+        ds.windows, chunk=cfg.chunk,
+        use_kernel=cfg.resolved_feature_path() == "kernel")
+
+    masks = W.default_day_split(ds, cfg.n_days)
+    split = np.full((len(ds),), -1, np.int8)
+    for code, name in enumerate(SPLIT_NAMES):
+        split[masks[name]] = code
+    if (split < 0).any():
+        raise AssertionError("day split left windows unassigned — "
+                             "default_day_split must cover every day")
+
+    active = np.unique(ds.func_id)
+    return BuiltDataset(
+        windows=ds.windows, features=feats, labels=labels,
+        confidence=conf, votes=votes, func_id=ds.func_id,
+        start_min=ds.start_min, pattern=ds.pattern,
+        day=ds.day().astype(np.int32), split=split,
+        series=traces.counts[active].astype(np.float32),
+        series_pattern=traces.pattern[active].astype(np.int32))

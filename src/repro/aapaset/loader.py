@@ -1,0 +1,96 @@
+"""Deterministic sharded loaders over built AAPAset artifacts.
+
+One loader feeds all three consumers:
+
+* ``arrays(split)`` — full-split (X, y, conf) host arrays for
+  ``core.gbdt.fit`` and ``core.calibration.fit`` (both are full-batch);
+* ``batches(split, ...)`` — seeded, shardable minibatch iterator
+  (``shard_index``/``num_shards`` partition the permutation the way a
+  ``repro.dist.sharding`` dp axis would split a global batch);
+* ``series()`` — the kept functions' count series for
+  ``forecast.backtest`` / ``forecast.conformal``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aapaset import manifest as MF
+from repro.aapaset import registry
+from repro.aapaset.build import BuiltDataset
+
+
+@dataclasses.dataclass
+class AAPAsetLoader:
+    data: BuiltDataset
+    manifest: dict
+
+    @classmethod
+    def from_name(cls, name: str,
+                  root: pathlib.Path | str = MF.DEFAULT_ROOT,
+                  **overrides) -> "AAPAsetLoader":
+        """Build-or-load a registry dataset and wrap it."""
+        cfg = registry.get(name, **overrides)
+        built, man = MF.build_or_load(cfg, root)
+        return cls(built, man)
+
+    @property
+    def name(self) -> str:
+        return self.manifest["config"]["name"]
+
+    @property
+    def dataset_id(self) -> str:
+        """`name-hash12`: the exact artifact identity for logs/benches."""
+        return f"{self.name}-{self.manifest['hash']}"
+
+    def split_indices(self, split: str | None = None,
+                      *, labeled_only: bool = True) -> np.ndarray:
+        mask = np.ones(len(self.data), bool) if split is None \
+            else self.data.split_mask(split)
+        if labeled_only:
+            mask = mask & (self.data.labels >= 0)
+        return np.nonzero(mask)[0]
+
+    def arrays(self, split: str | None = None,
+               *, labeled_only: bool = True):
+        """(X [n, 38], y [n], conf [n]) host arrays for one split."""
+        idx = self.split_indices(split, labeled_only=labeled_only)
+        return (self.data.features[idx], self.data.labels[idx],
+                self.data.confidence[idx])
+
+    def batches(self, split: str, batch_size: int, *, seed: int = 0,
+                shard_index: int = 0, num_shards: int = 1,
+                labeled_only: bool = True,
+                drop_remainder: bool = True) -> Iterator[tuple]:
+        """Deterministic minibatches of (X, y, conf) as jnp arrays.
+
+        The same (seed, num_shards) always yields the same batch stream;
+        shards partition the shuffled index set disjointly. With
+        ``drop_remainder=True`` (the lockstep data-parallel setting)
+        every shard sees the same number of rows and batches; with
+        ``False`` the shards cover the split exactly.
+        """
+        if not 0 <= shard_index < num_shards:
+            raise ValueError(f"shard_index {shard_index} out of range "
+                             f"for num_shards {num_shards}")
+        idx = self.split_indices(split, labeled_only=labeled_only)
+        perm = np.random.default_rng(seed).permutation(idx)
+        mine = perm[shard_index::num_shards]
+        if drop_remainder:            # equalize shards for lockstep dp
+            mine = mine[: len(perm) // num_shards]
+        stop = len(mine) - (len(mine) % batch_size if drop_remainder
+                            else 0)
+        for lo in range(0, stop, batch_size):
+            take = mine[lo:lo + batch_size]
+            yield (jnp.asarray(self.data.features[take]),
+                   jnp.asarray(self.data.labels[take]),
+                   jnp.asarray(self.data.confidence[take]))
+
+    def series(self, *, max_functions: int | None = None) -> np.ndarray:
+        """[F, T] counts of the kept functions, for forecast backtests."""
+        s = self.data.series
+        return s if max_functions is None else s[:max_functions]

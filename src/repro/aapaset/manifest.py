@@ -1,0 +1,257 @@
+"""Content-addressed AAPAset artifacts: npz shards + a JSON manifest.
+
+An artifact is addressed by the sha256 of its *content key* — the
+(config, seed) fields that determine every byte of the dataset under the
+current code, excluding execution knobs (chunk size, rows per shard)
+that are bit-exactness-invariant. Rebuilding the same config is a cache
+hit; every benchmark and test can name the exact dataset it ran on by
+``name-hash12``. The address does NOT fingerprint the producing code:
+any change to the trace generators, feature math, or labeling functions
+that alters dataset bytes MUST bump ``SCHEMA_VERSION`` so cached
+artifacts (local trees and the CI actions/cache) invalidate.
+
+The manifest carries a dataset card (class balance, LF coverage/conflict,
+agreement, split sizes, archetypes present) plus per-shard row counts and
+sha256 digests of the raw array bytes (array digests, not npz file bytes,
+so the address is independent of zip timestamps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import time
+
+import numpy as np
+
+from repro.core.archetypes import ARCHETYPE_NAMES
+from repro.core.labeling import LABELING_FUNCTIONS
+from repro.aapaset.build import (DEFAULT_CHUNK, SPLIT_NAMES, BuiltDataset,
+                                 build)
+
+SCHEMA_VERSION = 1
+DEFAULT_ROOT = pathlib.Path("experiments/aapaset")
+
+_SHARD_KEYS = ("windows", "features", "labels", "confidence", "votes",
+               "func_id", "start_min", "pattern", "day", "split")
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetConfig:
+    """One named AAPAset build. Content fields address the artifact;
+    `chunk` and `shard_rows` are execution knobs (excluded from the hash —
+    they cannot change any output byte).
+
+    `feature_path` selects the feature implementation: "ref" (pure-jnp
+    oracle math, bit-exact everywhere), "kernel" (the Pallas TPU kernel,
+    ~5e-4-close to ref), or "auto" (kernel iff a TPU backend is
+    attached). The RESOLVED value is part of the content key, because
+    kernel- and ref-built artifacts differ in low-order bits — the same
+    address must never map to different bytes."""
+
+    name: str
+    n_functions: int
+    n_days: int
+    seed: int = 0
+    family: str = "default"
+    window: int = 60
+    stride: int = 10
+    min_total_invocations: float = 1000.0
+    feature_path: str = "auto"      # "auto" | "kernel" | "ref"
+    chunk: int = DEFAULT_CHUNK
+    shard_rows: int = 65536
+
+    def resolved_feature_path(self) -> str:
+        if self.feature_path != "auto":
+            return self.feature_path
+        import jax
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+    def content_key(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "name": self.name,
+                "n_functions": self.n_functions, "n_days": self.n_days,
+                "seed": self.seed, "family": self.family,
+                "window": self.window, "stride": self.stride,
+                "min_total_invocations": self.min_total_invocations,
+                "feature_path": self.resolved_feature_path()}
+
+
+def hash_json(obj, n: int = 12) -> str:
+    """The one content-keying recipe: sha256 of canonical JSON."""
+    blob = json.dumps(obj, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:n]
+
+
+def sweep_stale_tmp(parent: pathlib.Path, pattern: str,
+                    max_age_s: float = 3600.0) -> None:
+    """Remove `.tmp-*` staging files/dirs orphaned by killed writers.
+
+    The age gate spares LIVE concurrent writers: their staging paths are
+    written within seconds of creation, orphans sit for hours."""
+    cutoff = time.time() - max_age_s
+    for stale in parent.glob(pattern):
+        try:
+            if stale.stat().st_mtime >= cutoff:
+                continue
+            if stale.is_dir():
+                shutil.rmtree(stale, ignore_errors=True)
+            else:
+                stale.unlink()
+        except OSError:
+            pass
+
+
+def config_hash(cfg: DatasetConfig) -> str:
+    return hash_json(cfg.content_key())
+
+
+def artifact_dir(cfg: DatasetConfig,
+                 root: pathlib.Path | str = DEFAULT_ROOT) -> pathlib.Path:
+    return pathlib.Path(root) / f"{cfg.name}-{config_hash(cfg)}"
+
+
+def is_cached(cfg: DatasetConfig,
+              root: pathlib.Path | str = DEFAULT_ROOT) -> bool:
+    return (artifact_dir(cfg, root) / "manifest.json").exists()
+
+
+def _digest(arrays: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes())
+    return h.hexdigest()
+
+
+def dataset_card(built: BuiltDataset) -> dict:
+    """Class balance, LF coverage/conflict, agreement, split sizes."""
+    y, votes = built.labels, built.votes
+    labeled = y >= 0
+    n_labeled = int(labeled.sum())
+    balance = np.bincount(y[labeled], minlength=4) / max(n_labeled, 1)
+
+    fired = votes >= 0
+    coverage = fired.mean(axis=0)
+    # conflict: >= 2 LFs fired and disagree (vectorized over all windows)
+    vmax = np.where(fired, votes, -1).max(axis=1)
+    vmin = np.where(fired, votes, 127).min(axis=1)
+    multi = fired.sum(axis=1) >= 2
+    conflict = float((multi & (vmax != vmin)).mean())
+
+    return {
+        "n_windows": len(built),
+        "n_labeled": n_labeled,
+        "abstain_rate": float((~labeled).mean()),
+        "class_balance": {n: float(b) for n, b in
+                          zip(ARCHETYPE_NAMES, balance)},
+        "archetypes_present": [n for n, b in
+                               zip(ARCHETYPE_NAMES, balance) if b > 0],
+        "lf_coverage": {fn.__name__: float(c) for fn, c in
+                        zip(LABELING_FUNCTIONS, coverage)},
+        "lf_conflict_rate": conflict,
+        "mean_agreement": float(built.confidence[labeled].mean())
+        if n_labeled else 0.0,
+        "split_sizes": {name: int((built.split == code).sum())
+                        for code, name in enumerate(SPLIT_NAMES)},
+        "n_functions_kept": int(built.series.shape[0]),
+    }
+
+
+def save(built: BuiltDataset, cfg: DatasetConfig,
+         root: pathlib.Path | str = DEFAULT_ROOT) -> dict:
+    """Write npz shards + series + manifest.json; returns the manifest.
+
+    Everything is staged into a per-process temp directory and published
+    with one atomic rename, so neither a crash mid-save nor a concurrent
+    builder of the same address can expose a half-written artifact (the
+    rename loser discards its copy — both built identical bytes).
+    """
+    out = artifact_dir(cfg, root)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    sweep_stale_tmp(out.parent, f".tmp-{out.name}-*")
+    tmp = out.parent / f".tmp-{out.name}-{os.getpid()}"
+    tmp.mkdir(parents=True, exist_ok=True)
+
+    shards = []
+    for i, lo in enumerate(range(0, max(len(built), 1), cfg.shard_rows)):
+        hi = min(lo + cfg.shard_rows, len(built))
+        arrays = {k: getattr(built, k)[lo:hi] for k in _SHARD_KEYS}
+        np.savez_compressed(tmp / f"shard-{i:05d}.npz", **arrays)
+        shards.append({"file": f"shard-{i:05d}.npz", "rows": hi - lo,
+                       "sha256": _digest(arrays)})
+
+    series = {"series": built.series,
+              "series_pattern": built.series_pattern}
+    np.savez_compressed(tmp / "series.npz", **series)
+
+    manifest = {
+        "schema": SCHEMA_VERSION,
+        "config": dataclasses.asdict(cfg),
+        "hash": config_hash(cfg),
+        "card": dataset_card(built),
+        "shards": shards,
+        "series_sha256": _digest(series),
+    }
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    try:
+        tmp.replace(out)
+    except OSError:
+        if (out / "manifest.json").exists():
+            # a concurrent builder published first — same bytes, drop ours
+            shutil.rmtree(tmp, ignore_errors=True)
+        else:
+            # stale partial dir (pre-atomic crash): clear and publish;
+            # if a concurrent repairer wins this retry, adopt its copy
+            # (identical bytes) and drop ours
+            shutil.rmtree(out, ignore_errors=True)
+            try:
+                tmp.replace(out)
+            except OSError:
+                shutil.rmtree(tmp, ignore_errors=True)
+    return manifest
+
+
+def read_manifest(cfg: DatasetConfig,
+                  root: pathlib.Path | str = DEFAULT_ROOT) -> dict:
+    with open(artifact_dir(cfg, root) / "manifest.json") as f:
+        return json.load(f)
+
+
+def load(cfg: DatasetConfig, root: pathlib.Path | str = DEFAULT_ROOT,
+         *, verify: bool = False,
+         manifest: dict | None = None) -> BuiltDataset:
+    """Reassemble a BuiltDataset from its shards (cache hit)."""
+    out = artifact_dir(cfg, root)
+    if manifest is None:
+        manifest = read_manifest(cfg, root)
+    parts: dict[str, list] = {k: [] for k in _SHARD_KEYS}
+    for sh in manifest["shards"]:
+        with np.load(out / sh["file"]) as z:
+            arrays = {k: z[k] for k in _SHARD_KEYS}
+        if verify and _digest(arrays) != sh["sha256"]:
+            raise ValueError(f"corrupt shard {sh['file']} in {out}")
+        for k in _SHARD_KEYS:
+            parts[k].append(arrays[k])
+    with np.load(out / "series.npz") as z:
+        series = z["series"]
+        series_pattern = z["series_pattern"]
+    return BuiltDataset(
+        **{k: np.concatenate(parts[k]) for k in _SHARD_KEYS},
+        series=series, series_pattern=series_pattern)
+
+
+def build_or_load(cfg: DatasetConfig,
+                  root: pathlib.Path | str = DEFAULT_ROOT,
+                  *, verify: bool = False) -> tuple[BuiltDataset, dict]:
+    """The engine's front door: content-addressed build with caching."""
+    if is_cached(cfg, root):
+        manifest = read_manifest(cfg, root)
+        return load(cfg, root, verify=verify,
+                    manifest=manifest), manifest
+    built = build(cfg)
+    return built, save(built, cfg, root)

@@ -17,7 +17,7 @@ STRIDE_MIN = 10
 
 @dataclasses.dataclass
 class WindowDataset:
-    windows: np.ndarray    # [N, WINDOW_MIN] float32 invocation counts
+    windows: np.ndarray    # [N, window] f32 counts (width need not be 60)
     func_id: np.ndarray    # [N] int32
     start_min: np.ndarray  # [N] int32 (global minute index of window start)
     pattern: np.ndarray    # [N] int32 generator ground truth (diagnostics)
@@ -27,7 +27,8 @@ class WindowDataset:
 
     def day(self) -> np.ndarray:
         """1-based day index of each window (by window end)."""
-        return ((self.start_min + WINDOW_MIN - 1) // MINUTES_PER_DAY) + 1
+        width = self.windows.shape[1]
+        return ((self.start_min + width - 1) // MINUTES_PER_DAY) + 1
 
 
 def make_windows(traces: TraceSet, *, window: int = WINDOW_MIN,
@@ -66,6 +67,17 @@ def day_split(ds: WindowDataset, train_days=(1, 9), val_days=(10, 11),
         return (d >= lo) & (d <= hi)
     return {"train": mask(train_days), "val": mask(val_days),
             "test": mask(test_days)}
+
+
+def default_day_split(ds: WindowDataset, n_days: int):
+    """Day split in the paper's 9/2/3 proportions, covering every day of
+    the trace (at n_days=14 this is exactly the paper's 1-9 / 10-11 /
+    12-14 split). Returns dict of boolean masks."""
+    t_end = max(int(n_days * 9 / 14), 1)
+    v_end = max(int(n_days * 11 / 14), t_end + 1)
+    return day_split(ds, train_days=(1, t_end),
+                     val_days=(t_end + 1, v_end),
+                     test_days=(v_end + 1, n_days))
 
 
 def subset(ds: WindowDataset, mask: np.ndarray) -> WindowDataset:

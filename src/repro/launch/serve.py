@@ -31,7 +31,6 @@ def main():
     import jax
     from repro.configs import get_config, smoke_config
     from repro.core import gbdt, pipeline
-    from repro.data.azure_synth import generate_traces
     from repro.models import model as M
     from repro.scaling import registry
 
@@ -41,10 +40,10 @@ def main():
 
     cfg = smoke_config(get_config(args.arch))
     params = M.init(jax.random.PRNGKey(0), cfg)
-    traces = generate_traces(n_functions=16, n_days=4, seed=5)
-    trained = pipeline.train_aapa(traces,
-                                  gbdt.GBDTConfig(n_rounds=10, depth=3))
-    print(f"[serve] {cfg.name} classifier_acc={trained.test_acc:.3f}")
+    trained = pipeline.train_classifier(
+        "aapaset_ci", gbdt.GBDTConfig(n_rounds=10, depth=3))
+    print(f"[serve] {cfg.name} classifier on {trained.dataset_id} "
+          f"acc={trained.test_acc:.3f}")
 
     import examples.serve_autoscale as demo
     rng = np.random.default_rng(0)

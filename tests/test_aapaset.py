@@ -1,0 +1,333 @@
+"""The `repro.aapaset` dataset engine: chunked jitted build (bit-exact
+with the legacy host-loop path, one compile per chunk shape),
+content-addressed shard cache (deterministic manifests), day-split
+leakage, dataset-card bounds on `aapaset_ci`, kernel/ref feature parity
+on builder chunks, sharded loaders, and classifier save/load.
+
+Tier-1 builds `aapaset_ci` (~10K windows, seconds on CPU); the paper-
+scale `aapaset_300k` build + classifier train are `slow` (nightly CI).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import aapaset
+from repro.aapaset import build as B
+from repro.aapaset import manifest as MF
+from repro.core import features as F
+from repro.core import gbdt, labeling, pipeline
+from repro.core.archetypes import Archetype
+from repro.data.azure_synth import MINUTES_PER_DAY, generate_traces
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def ci_artifact(tmp_path_factory):
+    """aapaset_ci built once into a temp root, shared by this module."""
+    root = tmp_path_factory.mktemp("aapaset")
+    built, manifest = aapaset.build_or_load(aapaset.get("aapaset_ci"),
+                                            root)
+    return root, built, manifest
+
+
+@pytest.fixture(scope="module")
+def ci_loader(ci_artifact):
+    root, built, manifest = ci_artifact
+    return aapaset.AAPAsetLoader(built, manifest)
+
+
+# ------------------------------------------------------------- builder ----
+def test_builder_bit_exact_with_legacy_path():
+    """The chunked jitted builder reproduces the seed-state host loop
+    (separate feature/label dispatches, variable batch) byte for byte —
+    chunking, padding, and the fused jit change no output bit."""
+    rng = np.random.default_rng(0)
+    w = rng.gamma(2.0, 20.0, size=(3000, 60)).astype(np.float32)
+    w[10] = 0.0                                     # all-zero window
+
+    feats, labels, confs = [], [], []
+    for i in range(0, len(w), 1024):                # the legacy loop
+        wb = jnp.asarray(w[i:i + 1024])
+        fb = F.extract_features_jit(wb)
+        lb, cb, _ = labeling.weak_label(fb)
+        feats.append(np.asarray(fb))
+        labels.append(np.asarray(lb))
+        confs.append(np.asarray(cb))
+
+    X, y, c, votes = B.featurize_windows(w, chunk=768)
+    np.testing.assert_array_equal(X, np.concatenate(feats))
+    np.testing.assert_array_equal(y, np.concatenate(labels))
+    np.testing.assert_array_equal(c, np.concatenate(confs))
+    assert votes.shape == (len(w), labeling.N_LFS)
+
+
+def test_builder_one_compile_per_chunk_shape():
+    """Different dataset sizes with the same chunk reuse ONE compilation
+    (the tail chunk is padded to the fixed chunk shape)."""
+    rng = np.random.default_rng(1)
+    before = B._build_chunk._cache_size()
+    for n in (700, 1500, 2100):
+        w = rng.gamma(2.0, 10.0, size=(n, 60)).astype(np.float32)
+        X, y, c, v = B.featurize_windows(w, chunk=512)
+        assert X.shape == (n, F.N_FEATURES)
+    grown = B._build_chunk._cache_size() - before
+    assert grown <= 1, f"retraced per dataset size: {grown} compilations"
+
+
+def test_kernel_ref_parity_on_builder_chunks(ci_artifact):
+    """Pallas window-features kernel (interpret mode) vs the kernels.ref
+    oracle on real builder-produced chunks, including the zero-padded
+    tail the builder feeds the jitted step."""
+    _, built, _ = ci_artifact
+    chunk = built.windows[:257]
+    padded = np.concatenate(
+        [chunk, np.zeros((255, chunk.shape[1]), np.float32)])
+    got = np.asarray(ops.window_features(jnp.asarray(padded),
+                                         interpret=True))
+    want = np.asarray(F.stat_time_features(jnp.asarray(padded)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+# ------------------------------------------- manifest / shard cache ----
+def test_same_config_same_seed_identical_manifest(tmp_path):
+    """Content-addressing: two independent builds of the same config+seed
+    produce identical hashes, shard digests, and dataset cards."""
+    cfg = aapaset.get("aapaset_ci", n_functions=6, n_days=2)
+    _, m1 = aapaset.build_or_load(cfg, tmp_path / "a")
+    _, m2 = aapaset.build_or_load(cfg, tmp_path / "b")
+    assert m1["hash"] == m2["hash"]
+    assert [s["sha256"] for s in m1["shards"]] == \
+        [s["sha256"] for s in m2["shards"]]
+    assert m1["series_sha256"] == m2["series_sha256"]
+    assert m1["card"] == m2["card"]
+
+
+def test_execution_knobs_do_not_change_the_address():
+    cfg = aapaset.get("aapaset_ci")
+    assert aapaset.config_hash(cfg) == \
+        aapaset.config_hash(aapaset.get("aapaset_ci", chunk=1024,
+                                        shard_rows=128))
+    # content fields DO change it
+    assert aapaset.config_hash(cfg) != \
+        aapaset.config_hash(aapaset.get("aapaset_ci", seed=1))
+    # the feature implementation is a content field: kernel- and
+    # ref-built artifacts must never share an address
+    assert aapaset.config_hash(
+        aapaset.get("aapaset_ci", feature_path="kernel")) != \
+        aapaset.config_hash(aapaset.get("aapaset_ci",
+                                        feature_path="ref"))
+    # "auto" resolves deterministically on this backend
+    import jax
+    want = "kernel" if jax.default_backend() == "tpu" else "ref"
+    assert cfg.resolved_feature_path() == want
+    assert aapaset.config_hash(cfg) == aapaset.config_hash(
+        aapaset.get("aapaset_ci", feature_path=want))
+
+
+def test_cache_hit_skips_the_build(ci_artifact, monkeypatch):
+    root, built, manifest = ci_artifact
+
+    def boom(cfg):
+        raise AssertionError("cache miss: build() was called")
+
+    monkeypatch.setattr(MF, "build", boom)
+    again, m = aapaset.build_or_load(aapaset.get("aapaset_ci"), root,
+                                     verify=True)
+    assert m["hash"] == manifest["hash"]
+    np.testing.assert_array_equal(again.features, built.features)
+    np.testing.assert_array_equal(again.windows, built.windows)
+
+
+def test_sharding_roundtrip_multiple_shards(tmp_path):
+    """Datasets larger than shard_rows split across shards and
+    reassemble losslessly."""
+    cfg = aapaset.get("aapaset_ci", n_functions=6, n_days=2,
+                      shard_rows=500)
+    built, manifest = aapaset.build_or_load(cfg, tmp_path)
+    assert len(manifest["shards"]) > 1
+    assert sum(s["rows"] for s in manifest["shards"]) == len(built)
+    loaded = MF.load(cfg, tmp_path, verify=True)
+    np.testing.assert_array_equal(loaded.features, built.features)
+    np.testing.assert_array_equal(loaded.split, built.split)
+
+
+# ------------------------------------------------------- day splits ----
+def test_day_split_no_leakage_at_boundaries(ci_artifact):
+    """Windows are assigned to splits by day-of-window-end: a window
+    straddling a split boundary must land in the LATER split, so no
+    test-day minute ever appears in a training window."""
+    _, built, _ = ci_artifact
+    day = built.day
+    # a day never spans two splits
+    for d in np.unique(day):
+        assert len(np.unique(built.split[day == d])) == 1
+    # split day ranges are disjoint and ordered train < val < test
+    train_d = day[built.split == 0]
+    val_d = day[built.split == 1]
+    test_d = day[built.split == 2]
+    assert train_d.max() < val_d.min()
+    assert val_d.max() < test_d.min()
+    # boundary windows: a window that starts on day d but ends on day
+    # d+1 is assigned day d+1 (the later split), so its minutes never
+    # leak into the earlier split
+    end_min = built.start_min + built.windows.shape[1] - 1
+    straddle = (built.start_min // MINUTES_PER_DAY
+                < end_min // MINUTES_PER_DAY)
+    assert straddle.any()
+    np.testing.assert_array_equal(
+        day[straddle], end_min[straddle] // MINUTES_PER_DAY + 1)
+
+
+def test_day_split_respects_nondefault_window_width(tmp_path):
+    """day() must use the config's window width, not the 60-min default:
+    a 120-min window ending on a later day belongs to the later split."""
+    cfg = aapaset.get("aapaset_ci", n_functions=6, n_days=2, window=120)
+    built, _ = aapaset.build_or_load(cfg, tmp_path)
+    end_min = built.start_min + 120 - 1
+    np.testing.assert_array_equal(built.day,
+                                  end_min // MINUTES_PER_DAY + 1)
+    for d in np.unique(built.day):
+        assert len(np.unique(built.split[built.day == d])) == 1
+
+
+def test_default_day_split_covers_every_day_beyond_14():
+    """n_days > 14 (an advertised override) must not leave later days
+    unassigned — unassigned rows would silently land in train."""
+    from repro.data import windows as W
+    traces = generate_traces(n_functions=3, n_days=16, seed=0)
+    ds = W.make_windows(traces, min_total_invocations=0.0)
+    masks = W.default_day_split(ds, 16)
+    total = sum(int(m.sum()) for m in masks.values())
+    assert total == len(ds)
+    # and at exactly 14 days it is still the paper's 1-9/10-11/12-14
+    traces14 = generate_traces(n_functions=2, n_days=14, seed=1)
+    ds14 = W.make_windows(traces14, min_total_invocations=0.0)
+    m14 = W.default_day_split(ds14, 14)
+    d = ds14.day()
+    assert d[m14["train"]].max() == 9
+    assert (d[m14["val"]].min(), d[m14["val"]].max()) == (10, 11)
+    assert (d[m14["test"]].min(), d[m14["test"]].max()) == (12, 14)
+    assert sum(int(x.sum()) for x in m14.values()) == len(ds14)
+
+
+def test_ci_dataset_card_bounds(ci_artifact):
+    """LF coverage/agreement bounds the paper's weak supervision relies
+    on, pinned on the tier-1 artifact."""
+    _, built, manifest = ci_artifact
+    card = manifest["card"]
+    assert card["n_windows"] > 9000            # ~10K tier-1 scale
+    assert card["abstain_rate"] < 0.35
+    assert card["mean_agreement"] > 0.8        # votes mostly agree
+    assert card["lf_conflict_rate"] < 0.1
+    assert len(card["archetypes_present"]) == 4
+    cov = card["lf_coverage"]
+    assert all(0.0 < c < 0.9 for c in cov.values())
+    assert sum(card["split_sizes"].values()) == card["n_windows"]
+
+
+# ----------------------------------------------------------- loaders ----
+def test_loader_deterministic_and_disjoint_shards(ci_loader):
+    a = [np.asarray(y) for _, y, _ in
+         ci_loader.batches("train", 512, seed=3)]
+    b = [np.asarray(y) for _, y, _ in
+         ci_loader.batches("train", 512, seed=3)]
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    assert len(a) == len(b)
+
+    # shards partition the (undropped) permutation disjointly
+    full = ci_loader.split_indices("train")
+    seen = []
+    for s in range(3):
+        for X, y, c in ci_loader.batches("train", 128, seed=0,
+                                         shard_index=s, num_shards=3,
+                                         drop_remainder=False):
+            seen.append(np.asarray(y))
+    assert sum(len(s) for s in seen) == len(full)
+
+    # lockstep dp: with drop_remainder every shard yields the same
+    # number of batches even when the split size is not divisible
+    counts = [sum(1 for _ in ci_loader.batches("train", 64, seed=0,
+                                               shard_index=s,
+                                               num_shards=3))
+              for s in range(3)]
+    assert len(set(counts)) == 1 and counts[0] > 0
+
+
+def test_loader_arrays_feed_gbdt_and_calibration(ci_loader):
+    X, y, conf = ci_loader.arrays("train")
+    assert X.shape[1] == F.N_FEATURES
+    assert (y >= 0).all() and ((conf > 0) & (conf <= 1)).all()
+    trained = pipeline.train_from_loader(
+        ci_loader, gbdt.GBDTConfig(n_rounds=8, depth=3))
+    assert trained.dataset_id == ci_loader.dataset_id
+    assert trained.test_acc > 0.9
+
+
+def test_loader_series_feeds_backtests(ci_loader):
+    from repro.forecast import backtest
+    y = ci_loader.series(max_functions=3)[:, :200]
+    preds = np.asarray(backtest.batch_smooth(["ewma"], y))
+    assert preds.shape == (1, 3, 200)
+
+
+def test_trained_save_load_roundtrip(tmp_path, ci_loader):
+    trained = pipeline.train_from_loader(
+        ci_loader, gbdt.GBDTConfig(n_rounds=8, depth=3))
+    trained.save(tmp_path / "clf.npz")
+    loaded = pipeline.TrainedAAPA.load(tmp_path / "clf.npz")
+    assert loaded.dataset_id == trained.dataset_id
+    assert loaded.test_acc == trained.test_acc
+
+    X = jnp.asarray(ci_loader.arrays("test")[0][:64])
+    np.testing.assert_array_equal(
+        np.asarray(gbdt.predict_logits(trained.params, X)),
+        np.asarray(gbdt.predict_logits(loaded.params, X)))
+    # the classify closure still jits from loaded params
+    import jax
+    arch, conf = jax.jit(loaded.make_classify())(X[0])
+    assert arch.shape == () and 0.0 <= float(conf) <= 1.0
+
+
+# ------------------------------------------- scenario trace families ----
+def test_registry_names_and_scenario_families():
+    assert set(aapaset.available()) >= {
+        "aapaset_300k", "aapaset_ci", "spike_heavy", "regime_switch",
+        "diurnal_burst"}
+    spike = generate_traces(n_functions=40, n_days=2, seed=0,
+                            family="spike_heavy")
+    default = generate_traces(n_functions=40, n_days=2, seed=0)
+    frac = (spike.pattern == Archetype.SPIKE).mean()
+    assert frac > (default.pattern == Archetype.SPIKE).mean()
+    assert frac > 0.4
+    regime = generate_traces(n_functions=8, n_days=2, seed=0,
+                             family="regime_switch")
+    assert regime.counts.shape == (8, 2 * MINUTES_PER_DAY)
+    assert (regime.counts >= 0).all()
+
+
+def test_scenario_variant_builds_and_is_distinct(tmp_path):
+    cfg = aapaset.get("diurnal_burst", n_functions=8, n_days=2)
+    built, manifest = aapaset.build_or_load(cfg, tmp_path)
+    assert manifest["hash"] != aapaset.config_hash(
+        aapaset.get("aapaset_ci", n_functions=8, n_days=2))
+    assert "SPIKE" in manifest["card"]["archetypes_present"]
+
+
+# ------------------------------------------------- paper scale (slow) ----
+@pytest.mark.slow
+def test_aapaset_300k_build_and_train(tmp_path):
+    """Nightly: the paper-scale artifact builds, its card reports all
+    four archetypes at ~300K windows, and the classifier trains from the
+    named artifact."""
+    built, manifest = aapaset.build_or_load(aapaset.get("aapaset_300k"),
+                                            tmp_path)
+    card = manifest["card"]
+    assert 250_000 <= card["n_windows"] <= 350_000
+    assert len(card["archetypes_present"]) == 4
+    assert len(manifest["shards"]) > 1     # actually sharded at scale
+
+    loader = aapaset.AAPAsetLoader(built, manifest)
+    trained = pipeline.train_from_loader(
+        loader, gbdt.GBDTConfig(n_rounds=20))
+    assert trained.test_acc > 0.97
+    assert trained.dataset_id.startswith("aapaset_300k-")
