@@ -3,57 +3,46 @@ violations, response times, cold starts, and replica-minute ratios for
 HPA / Generic-Predictive / AAPA, averaged over 5 seeds with 95% CIs
 (paper §IV.E: 5 trials).
 
-Policies resolve through ``repro.scaling.registry`` and ALL of them run
-in one jitted policies x workloads simulation
-(``repro.scaling.batch.make_batch_simulator``) — one compile, one
-dispatch per seed, instead of a per-policy ``make_simulator`` loop."""
+The whole figure is ONE ``repro.evals.matrix`` call: archetype-pure
+scenarios x seeds x policies with in-scan device-side metrics, plus a
+second small matrix sweeping every registered forecaster under the
+generic predictive policy. Both runs are content-addressed result cards;
+the per-archetype markdown table comes straight from
+``evals.artifacts.scenario_table``."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core.archetypes import ARCHETYPE_NAMES
-from repro.data.azure_synth import generate_traces
-from repro.scaling import batch, registry
-from repro.sim import metrics as M
-from repro.sim.cluster import SimConfig
+from repro.evals import matrix
+from repro.forecast import registry as forecast_registry
 
 POLICIES = ("hpa", "predictive", "aapa")
 N_PER_SEED = 32      # workloads per trial
 N_SEEDS = 5
-TEST_DAY = 12        # replay a held-out day (days 12-14 are test)
 
+SPEC = matrix.spec(
+    "bench_autoscaling_fig2",
+    policies=POLICIES,
+    forecasters=("holt_winters",),
+    scenarios=tuple(("archetype_pure", {"kind": k})
+                    for k in ARCHETYPE_NAMES),
+    seeds=tuple(range(1000, 1000 + N_SEEDS)),
+    n_workloads=N_PER_SEED, minutes=1440)
 
-def run_all(trained, policies=POLICIES):
-    cfg = SimConfig()
-    classify = trained.make_classify()
-    ctrls = [registry.get_controller(name, cfg, classify=classify)
-             for name in policies]
-    sim = batch.make_batch_simulator(ctrls, cfg)   # ONE compiled scan
-    rows = {k: {g: [] for g in range(4)} for k in policies}
-    t0 = time.time()
-    total_days = 0
-    for seed in range(N_SEEDS):
-        traces = generate_traces(n_functions=N_PER_SEED, n_days=13,
-                                 seed=1000 + seed)
-        day = traces.counts[:, (TEST_DAY - 1) * 1440:TEST_DAY * 1440]
-        out = sim(jnp.asarray(day))                # [P, W, M]
-        jax.block_until_ready(out.served)
-        total_days += N_PER_SEED * len(policies)
-        for p, name in enumerate(policies):
-            per = M.per_workload(jax.tree.map(lambda a: a[p], out))
-            for i, met in enumerate(per):
-                rows[name][int(traces.pattern[i])].append(met)
-    wall = time.time() - t0
-    return rows, wall, total_days
+SWEEP_SPEC = matrix.spec(
+    "bench_forecaster_sweep",
+    policies=("predictive",),
+    forecasters=tuple(forecast_registry.available()),
+    scenarios=(("archetype_mix", {}),),
+    seeds=(4242,), n_workloads=8, minutes=1440)
 
 
 def _ci(vals):
-    v = np.asarray(vals, np.float64)
+    v = np.asarray(vals, np.float64).reshape(-1)
     if len(v) < 2:
         return float(v.mean()), 0.0
     return float(v.mean()), float(1.96 * v.std(ddof=1) / np.sqrt(len(v)))
@@ -61,70 +50,75 @@ def _ci(vals):
 
 def main():
     trained = common.get_trained()
-    rows, wall, total_days = run_all(trained)
+    classify = trained.make_classify()
 
+    t0 = time.time()
+    run = matrix.run(SPEC, classify=classify,
+                     classifier_id=trained.dataset_id)
+    wall = time.time() - t0
+    total_days = (len(SPEC.scenarios) * len(SPEC.seeds) * len(POLICIES)
+                  * N_PER_SEED)
+    perw = run.result.per_workload               # fields [S, Z, 1, P, W]
+
+    # a cache hit only loads the result card — its wall clock says
+    # nothing about simulator throughput, so report it as such
     payload = {"wall_s": wall, "workload_days": total_days,
                "paper_sim_s_per_day": 420.0,
-               "sim_s_per_day": wall / total_days}
+               "sim_s_per_day": None if run.cached else wall / total_days,
+               "result_card": run.card["hash"], "cached": run.cached}
+
     table = {}
-    for g, gname in enumerate(ARCHETYPE_NAMES):
+    for s, gname in enumerate(ARCHETYPE_NAMES):
         table[gname] = {}
-        for name in rows:
-            ms = rows[name][g]
-            if not ms:
-                continue
-            viol = _ci([m.slo_violation_rate for m in ms])
-            cold = _ci([m.cold_start_rate for m in ms])
-            rep = _ci([m.replica_minutes for m in ms])
-            resp = _ci([m.mean_response_ms for m in ms])
-            p95 = _ci([m.p95_response_ms for m in ms])
-            osc = _ci([m.oscillations for m in ms])
+        for p, name in enumerate(POLICIES):
+            def pick(f, s=s, p=p):
+                return np.asarray(getattr(perw, f))[s, :, 0, p, :]
             table[gname][name] = {
-                "slo_violation_rate": viol, "cold_start_rate": cold,
-                "replica_minutes": rep, "mean_response_ms": resp,
-                "p95_response_ms": p95, "oscillations": osc,
-                "n": len(ms)}
-        if "hpa" in table[gname] and "aapa" in table[gname]:
-            h = table[gname]["hpa"]["replica_minutes"][0]
-            a = table[gname]["aapa"]["replica_minutes"][0]
-            table[gname]["resource_ratio_aapa_vs_hpa"] = a / max(h, 1e-9)
+                "slo_violation_rate": _ci(pick("slo_violation_rate")),
+                "cold_start_rate": _ci(pick("cold_start_rate")),
+                "replica_minutes": _ci(pick("replica_minutes")),
+                "mean_response_ms": _ci(pick("mean_response_ms")),
+                "p95_response_ms": _ci(pick("p95_response_ms")),
+                "oscillations": _ci(pick("oscillations")),
+                "n": int(pick("slo_violation_rate").size)}
+        h = table[gname]["hpa"]["replica_minutes"][0]
+        a = table[gname]["aapa"]["replica_minutes"][0]
+        table[gname]["resource_ratio_aapa_vs_hpa"] = a / max(h, 1e-9)
     payload["per_archetype"] = table
+    payload["per_archetype_table"] = run.card["tables"]["per_scenario"]
     payload["paper_resource_ratios"] = {"SPIKE": 7.7, "PERIODIC": 2.0,
                                         "RAMP": 2.1,
                                         "STATIONARY_NOISY": 2.0}
 
-    # forecaster sweep: the predictive family over every registered
-    # forecaster, one compiled forecasters x policies x workloads scan
-    from repro.forecast import registry as forecast_registry
-    fore = forecast_registry.available()
-    sweep_traces = generate_traces(n_functions=8, n_days=2, seed=4242)
-    sweep_rates = jnp.asarray(sweep_traces.counts[:, -1440:])
-    fsim = batch.make_forecast_batch_simulator(("predictive",), fore, cfg)
-    fout = fsim(sweep_rates)                            # [F, 1, W, M]
+    # forecaster sweep: predictive over every registered forecaster, one
+    # compiled forecasters x policies x workloads matrix
+    sweep = matrix.run(SWEEP_SPEC, classify=classify,
+                       classifier_id=trained.dataset_id)
+    sm = sweep.result.pooled
     payload["forecaster_sweep"] = {
-        f: {"slo_violation_rate": m.slo_violation_rate,
-            "replica_minutes": m.replica_minutes}
-        for f, m in ((f, M.aggregate(
-            jax.tree.map(lambda a: a[i, 0], fout), workload_axis=True))
-            for i, f in enumerate(fore))}
+        f: {"slo_violation_rate":
+            float(np.asarray(sm.slo_violation_rate)[0, 0, i, 0]),
+            "replica_minutes":
+            float(np.asarray(sm.replica_minutes)[0, 0, i, 0])}
+        for i, f in enumerate(SWEEP_SPEC.forecasters)}
+    payload["forecaster_sweep_card"] = sweep.card["hash"]
 
     # headline derived numbers
     derived = []
     for gname in ("SPIKE", "STATIONARY_NOISY"):
-        if "hpa" in table[gname] and "aapa" in table[gname]:
-            hv = table[gname]["hpa"]["slo_violation_rate"][0]
-            av = table[gname]["aapa"]["slo_violation_rate"][0]
-            red = (hv - av) / max(hv, 1e-9) * 100
-            derived.append(f"{gname.lower()}_viol_red={red:.0f}%")
+        hv = table[gname]["hpa"]["slo_violation_rate"][0]
+        av = table[gname]["aapa"]["slo_violation_rate"][0]
+        red = (hv - av) / max(hv, 1e-9) * 100
+        derived.append(f"{gname.lower()}_viol_red={red:.0f}%")
+    if run.cached:
+        derived.append("cached")
     common.emit("autoscaling_fig2",
-                wall / total_days * 1e6, "_".join(derived) or "ok", payload)
+                0.0 if run.cached else wall / total_days * 1e6,
+                "_".join(derived) or "ok", payload)
     for gname, row in table.items():
         ratio = row.get("resource_ratio_aapa_vs_hpa", float("nan"))
-        parts = []
-        for name in POLICIES:
-            if name in row:
-                v = row[name]["slo_violation_rate"][0]
-                parts.append(f"{name}={v:.4f}")
+        parts = [f"{name}={row[name]['slo_violation_rate'][0]:.4f}"
+                 for name in POLICIES]
         print(f"#  {gname:17s} viol: {' '.join(parts)}  "
               f"rep_ratio={ratio:.1f}x")
 

@@ -1,93 +1,82 @@
 """Paper §III.D + §V.D: REI per autoscaler and the weight-sensitivity
 check (+-0.05 on alpha/beta/gamma changes rankings by <2%).
 
-All policies in the registry are evaluated over a scenario suite from
-``repro.scaling.scenarios`` with ONE jitted policies x workloads
-simulation per scenario (``repro.scaling.batch``) — the REI / SLO
-trade-off table comes out of a single API instead of a per-policy
-``make_simulator`` loop."""
+Every policy in the registry is evaluated through the unified
+``repro.evals`` plane: one ``matrix.run`` call covers policies x
+scenarios x seeds with in-scan device-side metrics, scores every cell
+with scenario-aware REI, and content-addresses the result card — the
+emitted table names the exact run by hash."""
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import rei as R
-from repro.scaling import batch, registry, scenarios
-from repro.sim import metrics as M
+from repro.evals import artifacts, matrix
+from repro.evals import rei as ER
+from repro.scaling import registry
 
-SCENARIOS = (
-    ("archetype_mix", dict(n_workloads=16, minutes=1440, seed=3)),
-    ("burst_storm", dict(n_workloads=8, minutes=720, seed=4)),
-    ("diurnal_ramp", dict(n_workloads=8, minutes=1440, seed=5)),
-)
-
-
-def run_suite(policies, classify):
-    """-> {policy: {scenario: aggregate metrics}}."""
-    per = {p: {} for p in policies}
-    for sc_name, kw in SCENARIOS:
-        sc = scenarios.get(sc_name, **kw)
-        ctrls = [registry.get_controller(p, sc.cfg, classify=classify)
-                 for p in policies]
-        sim = batch.make_batch_simulator(ctrls, sc.cfg)
-        out = sim(jnp.asarray(sc.rates))            # [P, W, M]
-        jax.block_until_ready(out.served)
-        n_w = sc.rates.shape[0]
-        for i, p in enumerate(policies):
-            agg = M.aggregate(jax.tree.map(lambda a: a[i], out),
-                              workload_axis=True)
-            per[p][sc.name] = {
-                "slo_violation_rate": agg.slo_violation_rate,
-                "replica_minutes": agg.replica_minutes / n_w,
-                "oscillations": agg.oscillations / n_w,
-            }
-    return per
-
-
-def _rei_inputs(per, policy):
-    rows = per[policy].values()
-    return (float(np.mean([r["slo_violation_rate"] for r in rows])),
-            float(np.mean([r["replica_minutes"] for r in rows])),
-            float(np.mean([r["oscillations"] for r in rows])) + 1.0)
+SPEC = matrix.spec(
+    "bench_rei",
+    policies=tuple(registry.available()),
+    forecasters=("holt_winters",),
+    scenarios=(("archetype_mix", {}), ("burst_storm", {}),
+               ("diurnal_ramp", {})),
+    seeds=(3, 4), n_workloads=8, minutes=720)
 
 
 def main():
     trained = common.get_trained()
-    policies = registry.available()
-    per = run_suite(policies, trained.make_classify())
+    run = matrix.run(SPEC, classify=trained.make_classify(),
+                     classifier_id=trained.dataset_id)
+    m = run.result.pooled                      # fields [S, Z, F=1, P]
+    policies = SPEC.policies
 
-    reis = {}
-    for p in policies:
-        b = R.rei(*_rei_inputs(per, p))
-        reis[p] = {"rei": b.rei, "s_slo": b.s_slo, "s_eff": b.s_eff,
-                   "s_stab": b.s_stab}
+    base = np.asarray(run.result.rei.rei).mean(axis=(0, 1))[0]   # [P]
+    reis = {p: {"rei": float(base[i]),
+                "s_slo": float(np.asarray(run.result.rei.s_slo)
+                               .mean(axis=(0, 1))[0, i]),
+                "s_eff": float(np.asarray(run.result.rei.s_eff)
+                               .mean(axis=(0, 1))[0, i]),
+                "s_stab": float(np.asarray(run.result.rei.s_stab)
+                                .mean(axis=(0, 1))[0, i])}
+            for i, p in enumerate(policies)}
     base_rank = sorted(reis, key=lambda k: -reis[k]["rei"])
 
-    # sensitivity: perturb weights, count ranking flips
-    flips = 0
-    trials = 0
-    for d in (+0.05, -0.05):
-        for which in range(3):
-            w = [0.5, 0.3, 0.2]
-            w[which] += d
-            w[(which + 1) % 3] -= d
-            scores = {p: R.rei(*_rei_inputs(per, p),
-                               weights=tuple(w)).rei for p in policies}
-            rank = sorted(scores, key=lambda k: -scores[k])
-            trials += 1
-            if rank != base_rank:
-                flips += 1
+    # sensitivity: the 6 +/-0.05 weight perturbations, batched over every
+    # cell; a flip is any perturbation that reorders the mean ranking
+    sens = ER.sensitivity(m.slo_violation_rate, m.replica_minutes,
+                          m.scaling_actions, minutes=SPEC.minutes,
+                          n_workloads=SPEC.n_workloads)
+    per = np.asarray(sens.rei).mean(axis=(1, 2))[:, 0]           # [6, P]
+    flips = sum(
+        [policies[i] for i in np.argsort(-per[k])] != base_rank
+        for k in range(per.shape[0]))
+    trials = per.shape[0]
+
+    per_scenario = {
+        p: {sc: {"slo_violation_rate":
+                 float(np.asarray(m.slo_violation_rate)[s, :, 0, i].mean()),
+                 "replica_minutes":
+                 float(np.asarray(m.replica_minutes)[s, :, 0, i].mean()
+                       / SPEC.n_workloads),
+                 "oscillations":
+                 float(np.asarray(m.oscillations)[s, :, 0, i].mean()
+                       / SPEC.n_workloads)}
+            for s, sc in enumerate(SPEC.scenario_names())}
+        for i, p in enumerate(policies)}
 
     payload = {"rei": reis, "ranking": base_rank,
-               "per_scenario": per,
-               "scenarios": [s for s, _ in SCENARIOS],
-               "sensitivity_flips": flips, "sensitivity_trials": trials,
+               "per_scenario": per_scenario,
+               "scenarios": SPEC.scenario_names(),
+               "sensitivity_flips": int(flips),
+               "sensitivity_trials": int(trials),
+               "result_card": run.card["hash"], "cached": run.cached,
+               "rei_sensitivity_table":
+               artifacts.rei_sensitivity_table(run.result, SPEC),
                "paper_claim": "rank changes < 2% under +-0.05"}
     common.emit("rei_metric", 0.0,
-                f"rank={'>'.join(base_rank)}_flips={flips}/{trials}",
-                payload)
+                f"rank={'>'.join(base_rank)}_flips={flips}/{trials}"
+                f"_card={run.card['hash']}", payload)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Paper §III.C.3 ablation: uncertainty-aware scaling vs ablated variants.
 
-Four AAPA variants run in ONE batched policies x workloads simulation
-(``repro.scaling.batch``):
+Four AAPA variants run through the unified evaluation plane
+(``repro.evals.matrix.evaluate_controllers``: one fused policies x
+workloads scan with in-scan device-side metrics — no host aggregation
+loop), and the ablation lands in a content-addressed result card:
 
 * ``calibrated``    — beta-calibrated classifier confidence x the
   forecaster's *native* (residual-EWMA) interval signal;
@@ -15,15 +17,19 @@ violations + oscillations on noisy workloads.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from repro.data.azure_synth import generate_traces
+from repro.evals import artifacts, matrix
 from repro.forecast import conformal, registry as forecast_registry
-from repro.scaling import batch, registry
-from repro.sim import metrics as M
+from repro.scaling import registry
 from repro.sim.cluster import SimConfig
+
+SEED = 77
+REPLAY_DAY = 12
+FIELDS = ("slo_violation_rate", "cold_start_rate", "oscillations",
+          "replica_minutes", "scaling_actions")
 
 
 def main():
@@ -35,8 +41,9 @@ def main():
         arch, conf = calibrated(feats)
         return arch, jnp.float32(1.0)
 
-    traces = generate_traces(n_functions=32, n_days=13, seed=77)
-    rates = jnp.asarray(traces.counts[:, 11 * 1440:12 * 1440])
+    traces = generate_traces(n_functions=32, n_days=13, seed=SEED)
+    rates = jnp.asarray(
+        traces.counts[:, (REPLAY_DAY - 1) * 1440:REPLAY_DAY * 1440])
 
     # split-conformal band from the training days (held-out from replay)
     fcst = forecast_registry.make("holt_winters")
@@ -54,21 +61,21 @@ def main():
         "conformal": registry.get_controller(
             "aapa", cfg, classify=calibrated, band=band),
     }
-    out = batch.batch_simulate(list(variants.values()), rates, cfg)
-    jax.block_until_ready(out.served)
+    pooled, _ = matrix.evaluate_controllers(list(variants.values()),
+                                            rates, cfg)
 
-    res = {}
-    for i, name in enumerate(variants):
-        m = M.aggregate(jax.tree.map(lambda a: a[i], out),
-                        workload_axis=True)
-        res[name] = {"slo_violation_rate": m.slo_violation_rate,
-                     "cold_start_rate": m.cold_start_rate,
-                     "oscillations": m.oscillations,
-                     "replica_minutes": m.replica_minutes,
-                     "scaling_actions": m.scaling_actions}
+    res = {name: {f: float(getattr(pooled, f)[i]) for f in FIELDS}
+           for i, name in enumerate(variants)}
     res["conformal_band"] = {"q": float(band.q), "alpha": band.alpha,
                              "confidence": float(
                                  conformal.confidence(band))}
+
+    card = artifacts.save_card(
+        "bench_uncertainty",
+        {"variants": sorted(variants), "seed": SEED, "day": REPLAY_DAY,
+         "alpha": 0.9, "classifier": trained.dataset_id},
+        res)
+    res["result_card"] = card["hash"]
 
     dv = (res["overconfident"]["slo_violation_rate"]
           - res["calibrated"]["slo_violation_rate"])

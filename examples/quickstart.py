@@ -7,16 +7,28 @@ HPA / Generic-Predictive / AAPA, and prints the paper's headline metrics
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import hashlib
+
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import gbdt, pipeline, rei
+from repro.core import gbdt, pipeline
 from repro.data.azure_synth import generate_traces
+from repro.evals import matrix
 from repro.forecast import conformal, registry as forecast_registry
-from repro.scaling import batch, registry
-from repro.sim import metrics as M
+from repro.scaling import registry
 from repro.sim.cluster import SimConfig
+
+
+def _classifier_id(trained) -> str:
+    """Content id for an in-memory classifier (no artifact to name): the
+    digest of its fitted parameters, so retraining with different data
+    or config never hits a stale result card."""
+    leaves = jax.tree.leaves((trained.params, trained.cal))
+    h = hashlib.sha256()
+    for leaf in leaves:
+        h.update(np.asarray(leaf).tobytes())
+    return f"quickstart-{h.hexdigest()[:12]}"
 
 
 def main():
@@ -40,27 +52,43 @@ def main():
           f"confidence={float(conformal.confidence(band)):.3f}")
 
     print("== 3. replay one day under every registered autoscaler ==")
-    cfg = SimConfig()
-    rates = jnp.asarray(traces.counts[:16, -1440:])
-    names = registry.available()
-    ctrls = [registry.get_controller(n, cfg,
-                                     classify=trained.make_classify(),
-                                     **({"band": band}
-                                        if registry.spec(n).takes_forecaster
-                                        else {}))
-             for n in names]
-    # one jitted policies x workloads simulation for the whole table
-    out_all = batch.batch_simulate(ctrls, rates, cfg)
+    # the whole table is ONE repro.evals call: every policy simulated in
+    # one compiled scan, metrics accumulated in-scan on device, REI with
+    # scenario-aware baselines, and a content-addressed result card
+    spec = matrix.spec("quickstart",
+                       policies=tuple(registry.available()),
+                       scenarios=(("archetype_mix", {}),),
+                       seeds=(11,), n_workloads=16, minutes=1440)
+    run = matrix.run(spec, classify=trained.make_classify(),
+                     classifier_id=_classifier_id(trained))
+    m, r = run.result.pooled, run.result.rei
     print(f"   {'scaler':12s} {'viol%':>7s} {'cold%':>7s} "
           f"{'rep-min':>9s} {'p95 ms':>9s} {'REI':>6s}")
-    for p, name in enumerate(names):
-        m = M.aggregate(jax.tree.map(lambda a: a[p], out_all),
-                        workload_axis=True)
-        r = rei.rei(m.slo_violation_rate, m.replica_minutes / 16,
-                    m.oscillations / 16 + 1)
-        print(f"   {name:12s} {100*m.slo_violation_rate:7.3f} "
-              f"{100*m.cold_start_rate:7.3f} {m.replica_minutes:9.0f} "
-              f"{m.p95_response_ms:9.1f} {r.rei:6.3f}")
+    for p, name in enumerate(spec.policies):
+        pick = lambda a: float(np.asarray(a)[0, 0, 0, p])  # noqa: E731
+        print(f"   {name:12s} {100*pick(m.slo_violation_rate):7.3f} "
+              f"{100*pick(m.cold_start_rate):7.3f} "
+              f"{pick(m.replica_minutes):9.0f} "
+              f"{pick(m.p95_response_ms):9.1f} {pick(r.rei):6.3f}")
+    print(f"   result card: quickstart-{run.card['hash']} "
+          f"(cached={run.cached}; rerunning this script is a cache hit)")
+
+    print("== 4. wire the conformal band from step 2 into AAPA ==")
+    # ad-hoc controller variants go through the same fused metrics path
+    cfg = SimConfig()
+    variants = {
+        "aapa[native]": registry.get_controller(
+            "aapa", cfg, classify=trained.make_classify()),
+        "aapa[conformal]": registry.get_controller(
+            "aapa", cfg, classify=trained.make_classify(), band=band),
+    }
+    rates = matrix.build_rates(spec)[0, 0]        # same workloads as above
+    pooled, _ = matrix.evaluate_controllers(list(variants.values()),
+                                            rates, cfg)
+    for i, name in enumerate(variants):
+        print(f"   {name:16s} viol%="
+              f"{100 * float(pooled.slo_violation_rate[i]):.3f}  "
+              f"rep-min={float(pooled.replica_minutes[i]):.0f}")
 
 
 if __name__ == "__main__":

@@ -104,6 +104,36 @@ def sweep_stale_tmp(parent: pathlib.Path, pattern: str,
             pass
 
 
+def stage_dir(out: pathlib.Path) -> pathlib.Path:
+    """Per-process staging directory next to `out`, with stale-orphan
+    sweep. Pair with `publish_dir`."""
+    out.parent.mkdir(parents=True, exist_ok=True)
+    sweep_stale_tmp(out.parent, f".tmp-{out.name}-*")
+    tmp = out.parent / f".tmp-{out.name}-{os.getpid()}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    return tmp
+
+
+def publish_dir(tmp: pathlib.Path, out: pathlib.Path,
+                sentinel: str) -> None:
+    """Atomic rename with same-address race semantics: if a concurrent
+    writer published first (`sentinel` exists under `out`), drop our copy
+    — both built identical bytes. A stale partial dir (pre-atomic crash,
+    no sentinel) is cleared and replaced; if a concurrent repairer wins
+    that retry, adopt its copy and drop ours."""
+    try:
+        tmp.replace(out)
+    except OSError:
+        if (out / sentinel).exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+        else:
+            shutil.rmtree(out, ignore_errors=True)
+            try:
+                tmp.replace(out)
+            except OSError:
+                shutil.rmtree(tmp, ignore_errors=True)
+
+
 def config_hash(cfg: DatasetConfig) -> str:
     return hash_json(cfg.content_key())
 
@@ -170,10 +200,7 @@ def save(built: BuiltDataset, cfg: DatasetConfig,
     rename loser discards its copy — both built identical bytes).
     """
     out = artifact_dir(cfg, root)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    sweep_stale_tmp(out.parent, f".tmp-{out.name}-*")
-    tmp = out.parent / f".tmp-{out.name}-{os.getpid()}"
-    tmp.mkdir(parents=True, exist_ok=True)
+    tmp = stage_dir(out)
 
     shards = []
     for i, lo in enumerate(range(0, max(len(built), 1), cfg.shard_rows)):
@@ -198,21 +225,7 @@ def save(built: BuiltDataset, cfg: DatasetConfig,
     with open(tmp / "manifest.json", "w") as f:
         json.dump(manifest, f, indent=1)
 
-    try:
-        tmp.replace(out)
-    except OSError:
-        if (out / "manifest.json").exists():
-            # a concurrent builder published first — same bytes, drop ours
-            shutil.rmtree(tmp, ignore_errors=True)
-        else:
-            # stale partial dir (pre-atomic crash): clear and publish;
-            # if a concurrent repairer wins this retry, adopt its copy
-            # (identical bytes) and drop ours
-            shutil.rmtree(out, ignore_errors=True)
-            try:
-                tmp.replace(out)
-            except OSError:
-                shutil.rmtree(tmp, ignore_errors=True)
+    publish_dir(tmp, out, "manifest.json")
     return manifest
 
 

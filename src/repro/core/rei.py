@@ -1,18 +1,23 @@
-"""Resource Efficiency Index (paper §III.D).
+"""Resource Efficiency Index (paper §III.D) — scalar front-end.
 
     REI = alpha * S_SLO + beta * S_eff + gamma * S_stab
 
 S_SLO  = 1 - violation_rate
 S_eff  = 1 / normalized_pod_minutes
-S_stab = 1 / scaling_actions   (both normalized so scores live in (0, 1])
+S_stab = 1 / normalized_scaling_actions   (scores clipped into [0, 1])
+
+The math lives in ``repro.evals.rei`` (batched jnp over whole metric
+arrays); this module keeps the float dataclass API for scalar callers.
+Baselines are scenario-aware — they default from the episode length and
+workload count (`minutes=`, `n_workloads=`) — and the paper's §V.D
+one-pod-day constants are exactly the defaults (minutes=1440,
+n_workloads=1 -> 1440 pod-minutes, 10 actions; pinned by test).
 
 Default weights alpha=0.5, beta=0.3, gamma=0.2.
 """
 from __future__ import annotations
 
 import dataclasses
-
-import numpy as np
 
 DEFAULT_WEIGHTS = (0.5, 0.3, 0.2)
 
@@ -26,34 +31,32 @@ class REIBreakdown:
 
 
 def rei(violation_rate: float, pod_minutes: float, scaling_actions: float,
-        *, baseline_pod_minutes: float = 1440.0,
-        baseline_actions: float = 10.0,
+        *, minutes: float = 1440.0, n_workloads: float = 1.0,
+        baseline_pod_minutes: float | None = None,
+        baseline_actions: float | None = None,
         weights: tuple[float, float, float] = DEFAULT_WEIGHTS) -> REIBreakdown:
-    """Compute REI.
+    """Compute REI for one cell.
 
     pod_minutes is normalized by `baseline_pod_minutes` (default: one pod
-    for a whole day); scaling_actions by `baseline_actions`. Both
-    efficiency/stability scores are capped at 1 so REI is in [0, 1].
+    per workload for the episode length), scaling_actions by
+    `baseline_actions` (default: the paper's 10 per workload-day,
+    prorated). Both scores are capped at 1 so REI is in [0, 1].
     """
-    a, b, g = weights
-    s_slo = float(np.clip(1.0 - violation_rate, 0.0, 1.0))
-    norm_pm = max(pod_minutes / baseline_pod_minutes, 1e-9)
-    s_eff = float(np.clip(1.0 / norm_pm, 0.0, 1.0))
-    norm_act = max(scaling_actions / baseline_actions, 1e-9)
-    s_stab = float(np.clip(1.0 / norm_act, 0.0, 1.0))
-    return REIBreakdown(s_slo, s_eff, s_stab,
-                        a * s_slo + b * s_eff + g * s_stab)
+    from repro.evals import rei as batched   # lazy: evals imports the sim
+    b = batched.rei(violation_rate, pod_minutes, scaling_actions,
+                    minutes=minutes, n_workloads=n_workloads,
+                    baseline_pod_minutes=baseline_pod_minutes,
+                    baseline_actions=baseline_actions, weights=weights)
+    return REIBreakdown(float(b.s_slo), float(b.s_eff), float(b.s_stab),
+                        float(b.rei))
 
 
 def sensitivity(violation_rate, pod_minutes, scaling_actions,
                 delta: float = 0.05, **kw) -> list[REIBreakdown]:
     """REI under weight perturbations of +/- delta (paper §V.D)."""
-    a, b, g = DEFAULT_WEIGHTS
-    out = []
-    for da, db, dg in [(+delta, -delta, 0), (-delta, +delta, 0),
-                       (0, +delta, -delta), (0, -delta, +delta),
-                       (+delta, 0, -delta), (-delta, 0, +delta)]:
-        w = (a + da, b + db, g + dg)
-        out.append(rei(violation_rate, pod_minutes, scaling_actions,
-                       weights=w, **kw))
-    return out
+    from repro.evals import rei as batched
+    out = batched.sensitivity(violation_rate, pod_minutes, scaling_actions,
+                              delta=delta, **kw)
+    return [REIBreakdown(float(out.s_slo[i]), float(out.s_eff[i]),
+                         float(out.s_stab[i]), float(out.rei[i]))
+            for i in range(len(batched.SENSITIVITY_DELTAS))]

@@ -1,0 +1,19 @@
+"""The unified evaluation plane: run -> aggregate -> compare as ONE
+subsystem (paper §IV.D/§V), instead of per-benchmark aggregation loops.
+
+* ``metrics``   — device-side EpisodeMetrics (jnp, vmap-able): in-scan
+                  accumulators with fixed-bin histogram quantiles, plus
+                  post-hoc ``compute``/``pooled`` over MinuteOut arrays.
+                  ``repro.sim.metrics.aggregate`` is the NumPy oracle.
+* ``rei``       — batched REI + weight sensitivity with scenario-aware
+                  baselines (episode length x workload count).
+* ``matrix``    — policies x forecasters x scenarios x seeds in one
+                  compiled call; ``run(spec)`` is the front door.
+* ``artifacts`` — content-addressed result cards (same hashing scheme as
+                  ``aapaset.manifest``) + paper-table renderers
+                  (Table IV policy comparison, Fig 2 per-archetype
+                  breakdown, §V.D REI sensitivity).
+"""
+from repro.evals import artifacts, matrix, metrics, rei  # noqa: F401
+from repro.evals.matrix import (EvalResult, MatrixRun,   # noqa: F401
+                                MatrixSpec, run, smoke_spec, spec)

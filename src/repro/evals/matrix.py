@@ -1,0 +1,246 @@
+"""Policies x forecasters x scenarios x seeds in ONE compiled call.
+
+``spec(...)`` names an evaluation matrix (which policies, which
+forecasters, which scenarios at which seeds, on which plant);
+``make_runner(spec)`` compiles the whole grid into a single jitted
+function built on ``repro.scaling.batch.stack_controllers`` and the
+fused in-scan metrics of ``repro.evals.metrics`` — per-minute outputs
+never materialize, each cell returns EpisodeMetrics directly; and
+``run(spec)`` is the front door: content-addressed against
+``experiments/evals`` (same hashing scheme as ``aapaset.manifest``), so
+re-running an identical spec is a cache hit on the result card.
+
+    from repro.evals import matrix
+    run = matrix.run(matrix.spec(
+        "sweep", policies=("hpa", "aapa"), forecasters=("holt_winters",),
+        scenarios=(("burst_storm", {}), ("idle_wake", {})), seeds=(0, 1)))
+    run.result.pooled.slo_violation_rate        # [S, Z, F, P]
+    run.card["hash"]                            # names the exact run
+
+Policies that are not forecaster-aware (no `takes_forecaster` in their
+registry spec) simply ignore the forecaster axis — lane (f, p) repeats
+the same controller for every f, which keeps the result tensor dense.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.evals import metrics as EM
+from repro.evals import rei as ER
+from repro.scaling import batch, registry, scenarios
+from repro.sim.cluster import SimConfig
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixSpec:
+    """One named evaluation matrix. Every field is part of the content
+    key (including `bins`, which changes the reported quantiles)."""
+    name: str
+    policies: tuple[str, ...]
+    forecasters: tuple[str, ...]
+    scenarios: tuple[tuple[str, tuple[tuple[str, Any], ...]], ...]
+    seeds: tuple[int, ...]
+    n_workloads: int
+    minutes: int
+    sim: tuple[tuple[str, Any], ...] = ()
+    bins: int = EM.DEFAULT_BINS
+
+    def sim_config(self) -> SimConfig:
+        return SimConfig(**dict(self.sim))
+
+    def content_key(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "name": self.name,
+                "policies": list(self.policies),
+                "forecasters": list(self.forecasters),
+                "scenarios": [[n, dict(kw)] for n, kw in self.scenarios],
+                "seeds": list(self.seeds),
+                "n_workloads": self.n_workloads, "minutes": self.minutes,
+                "sim": dict(self.sim), "bins": self.bins}
+
+    @property
+    def shape(self) -> tuple[int, int, int, int]:
+        return (len(self.scenarios), len(self.seeds),
+                len(self.forecasters), len(self.policies))
+
+    def scenario_names(self) -> list[str]:
+        return [n if not kw else f"{n}:{dict(kw)}"
+                for n, kw in self.scenarios]
+
+
+def spec(name: str, *, policies: Sequence[str],
+         forecasters: Sequence[str] = ("holt_winters",),
+         scenarios: Sequence = (("archetype_mix", {}),),
+         seeds: Sequence[int] = (0,), n_workloads: int = 8,
+         minutes: int = 720, sim: dict | None = None,
+         bins: int = EM.DEFAULT_BINS) -> MatrixSpec:
+    """Normalizing constructor: scenario entries may be bare names or
+    (name, kwargs) pairs; kwargs/sim dicts become sorted tuples so the
+    spec is hashable and its content key canonical."""
+    norm = []
+    for entry in scenarios:
+        if isinstance(entry, str):
+            entry = (entry, {})
+        sc_name, kw = entry
+        norm.append((sc_name, tuple(sorted(dict(kw).items()))))
+    return MatrixSpec(name=name, policies=tuple(policies),
+                      forecasters=tuple(forecasters),
+                      scenarios=tuple(norm), seeds=tuple(seeds),
+                      n_workloads=int(n_workloads), minutes=int(minutes),
+                      sim=tuple(sorted((sim or {}).items())), bins=bins)
+
+
+def smoke_spec() -> MatrixSpec:
+    """The CI tier-1 smoke matrix: 2 policies x 2 scenarios x 1 seed."""
+    return spec("ci_smoke", policies=("hpa", "predictive"),
+                scenarios=(("burst_storm", {}), ("idle_wake", {})),
+                seeds=(0,), n_workloads=2, minutes=120)
+
+
+class EvalResult(NamedTuple):
+    """Structured result pytree of an evaluation matrix."""
+    pooled: EM.EpisodeMetrics        # fields [S, Z, F, P]
+    per_workload: EM.EpisodeMetrics  # fields [S, Z, F, P, W]
+    rei: ER.REIBreakdown             # fields [S, Z, F, P]
+
+
+class MatrixRun(NamedTuple):
+    spec: MatrixSpec
+    result: EvalResult               # numpy arrays
+    card: dict
+    cached: bool
+
+
+def controllers(spec_: MatrixSpec, classify=None) -> list:
+    """The F*P controller lanes, forecaster-major (lane = f * P + p)."""
+    cfg = spec_.sim_config()
+    ctrls = []
+    for f in spec_.forecasters:
+        for p in spec_.policies:
+            kw = ({"forecaster": f}
+                  if registry.spec(p).takes_forecaster else {})
+            ctrls.append(registry.get_controller(p, cfg, classify=classify,
+                                                 **kw))
+    return ctrls
+
+
+def build_rates(spec_: MatrixSpec) -> np.ndarray:
+    """Materialize the scenario x seed workload tensor [S, Z, W, M]."""
+    cfg = spec_.sim_config()
+    rows = []
+    for sc_name, kw in spec_.scenarios:
+        per_seed = [scenarios.get(sc_name, n_workloads=spec_.n_workloads,
+                                  minutes=spec_.minutes, seed=seed,
+                                  cfg=cfg, **dict(kw)).rates
+                    for seed in spec_.seeds]
+        rows.append(np.stack(per_seed))
+    rates = np.stack(rows).astype(np.float32)
+    expect = spec_.shape[:2] + (spec_.n_workloads, spec_.minutes)
+    if rates.shape != expect:
+        raise ValueError(f"scenario tensor is {rates.shape}, expected "
+                         f"{expect}; every scenario must honor "
+                         "n_workloads/minutes")
+    return rates
+
+
+def _lane_runner(ctrls, cfg, edges):
+    """(lane index, rates [W, M]) -> per-workload MetricAccums, with the
+    selected controller's decisions driving the plant — the shared core
+    of the matrix runner and the ad-hoc controller evaluator."""
+    def lane(idx, rates_w):
+        ctrl = batch.stack_controllers(ctrls, idx)
+        return jax.vmap(
+            lambda r: EM.simulate_accum(r, ctrl, cfg, edges))(rates_w)
+    return lane
+
+
+def make_runner(spec_: MatrixSpec, classify=None):
+    """jit: rates [S, Z, W, M] -> (pooled EpisodeMetrics [S, Z, F, P],
+    per-workload EpisodeMetrics [S, Z, F, P, W]). One compile, one
+    dispatch for the whole matrix."""
+    cfg = spec_.sim_config()
+    ctrls = controllers(spec_, classify)
+    edges = EM.response_edges(spec_.bins, cfg.resp_cap_sec)
+    idxs = jnp.arange(len(ctrls), dtype=jnp.int32)
+    _, _, f_axis, p_axis = spec_.shape
+
+    lane = _lane_runner(ctrls, cfg, edges)
+    cell = jax.vmap(lane, in_axes=(0, None))     # [L, W, ...]
+    over_seeds = jax.vmap(lambda r: cell(idxs, r))
+    over_scenarios = jax.vmap(over_seeds)        # [S, Z, L, W, ...]
+
+    def run_fn(rates):
+        accs = over_scenarios(jnp.asarray(rates, jnp.float32))
+        accs = jax.tree.map(
+            lambda a: a.reshape(a.shape[:2] + (f_axis, p_axis)
+                                + a.shape[3:]), accs)
+        per_w = EM.finalize(accs, edges)
+        pool = EM.finalize(jax.tree.map(lambda a: a.sum(4), accs), edges)
+        return pool, per_w
+
+    return jax.jit(run_fn)
+
+
+def make_controller_evaluator(ctrls: Sequence,
+                              cfg: SimConfig = SimConfig(), *,
+                              bins: int = EM.DEFAULT_BINS):
+    """Reusable jitted single-scenario evaluator for ad-hoc controllers
+    (ablation variants, custom bands): rates [W, M] -> (pooled
+    EpisodeMetrics [P], per-workload [P, W]). Keep the returned fn when
+    sweeping many rate tensors — each call reuses the one compile."""
+    ctrls = list(ctrls)
+    edges = EM.response_edges(bins, cfg.resp_cap_sec)
+    idxs = jnp.arange(len(ctrls), dtype=jnp.int32)
+    lane = _lane_runner(ctrls, cfg, edges)
+
+    def run_fn(rates_w):
+        accs = jax.vmap(lane, in_axes=(0, None))(idxs, rates_w)
+        return (EM.finalize(jax.tree.map(lambda a: a.sum(1), accs), edges),
+                EM.finalize(accs, edges))
+
+    return jax.jit(run_fn)
+
+
+def evaluate_controllers(ctrls: Sequence, rates,
+                         cfg: SimConfig = SimConfig(), *,
+                         bins: int = EM.DEFAULT_BINS):
+    """One-shot convenience wrapper over `make_controller_evaluator`."""
+    return make_controller_evaluator(ctrls, cfg, bins=bins)(
+        jnp.asarray(rates, jnp.float32))
+
+
+def _execute(spec_: MatrixSpec, classify) -> EvalResult:
+    pool, per_w = make_runner(spec_, classify)(build_rates(spec_))
+    rei_b = ER.rei(pool.slo_violation_rate, pool.replica_minutes,
+                   pool.scaling_actions, minutes=spec_.minutes,
+                   n_workloads=spec_.n_workloads)
+    to_np = lambda t: jax.tree.map(np.asarray, t)  # noqa: E731
+    return EvalResult(to_np(pool), to_np(per_w), to_np(rei_b))
+
+
+def run(spec_: MatrixSpec, *, classify=None, classifier_id: str = "",
+        root=None, force: bool = False) -> MatrixRun:
+    """The front door: evaluate the matrix, content-addressed.
+
+    `classifier_id` must name the classifier whenever `classify` is
+    passed (e.g. `trained.dataset_id`) — the callable itself cannot be
+    hashed, so the id is what keys the artifact."""
+    from repro.evals import artifacts
+    if classify is not None and not classifier_id:
+        raise ValueError("pass classifier_id= to content-address a run "
+                         "with a custom classifier")
+    key = dict(spec_.content_key(),
+               classifier=classifier_id or "default_classify")
+    root = artifacts.DEFAULT_ROOT if root is None else root
+    if not force and artifacts.is_cached(spec_.name, key, root):
+        result, card = artifacts.load_result(spec_.name, key, root)
+        return MatrixRun(spec_, result, card, True)
+    result = _execute(spec_, classify)
+    card = artifacts.save_result(spec_, key, result, root, replace=force)
+    return MatrixRun(spec_, result, card, False)

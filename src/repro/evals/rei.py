@@ -1,0 +1,98 @@
+"""Resource Efficiency Index (paper §III.D), batched.
+
+    REI = alpha * S_SLO + beta * S_eff + gamma * S_stab
+
+Operates on whole metric arrays (any broadcastable shape — e.g. the
+[S, Z, F, P] pooled metrics out of ``repro.evals.matrix``) in jnp, so one
+call scores every cell of an evaluation matrix.
+
+Baselines are *scenario-aware*: S_eff normalizes pod-minutes by one pod
+per workload for the episode length, and S_stab normalizes actions by the
+paper's 10-per-workload-day prorated to the episode — instead of the
+hardcoded one-pod-day constants. The paper's §V.D constants remain the
+defaults (minutes=1440, n_workloads=1 reproduces them exactly; pinned by
+tests/test_evals.py) and are exported as ``PAPER_BASELINE_*``.
+
+``repro.core.rei`` keeps the scalar float dataclass front-end on top of
+this module.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_WEIGHTS = (0.5, 0.3, 0.2)
+PAPER_BASELINE_POD_MINUTES = 1440.0   # one pod for one day (§V.D)
+PAPER_BASELINE_ACTIONS = 10.0         # per workload-day
+PAPER_DAY_MINUTES = 1440.0
+EPS = 1e-9
+
+SENSITIVITY_DELTAS = ((+1, -1, 0), (-1, +1, 0), (0, +1, -1),
+                      (0, -1, +1), (+1, 0, -1), (-1, 0, +1))
+
+
+class REIBreakdown(NamedTuple):
+    s_slo: jax.Array
+    s_eff: jax.Array
+    s_stab: jax.Array
+    rei: jax.Array
+
+
+def scenario_baselines(minutes, n_workloads=1.0):
+    """(baseline_pod_minutes, baseline_actions) for an episode of
+    `minutes` over `n_workloads` workloads: one always-on pod per
+    workload, and the paper's 10 actions per workload-day prorated."""
+    scale = jnp.asarray(minutes, jnp.float32) / PAPER_DAY_MINUTES
+    n = jnp.asarray(n_workloads, jnp.float32)
+    return (PAPER_BASELINE_POD_MINUTES * scale * n,
+            PAPER_BASELINE_ACTIONS * scale * n)
+
+
+def rei(violation_rate, pod_minutes, scaling_actions, *,
+        minutes=PAPER_DAY_MINUTES, n_workloads=1.0,
+        baseline_pod_minutes=None, baseline_actions=None,
+        weights=DEFAULT_WEIGHTS) -> REIBreakdown:
+    """Batched REI; all inputs broadcast. Baselines default from the
+    episode shape via `scenario_baselines`; pass `baseline_*` explicitly
+    to override (e.g. the paper constants for §V.D)."""
+    bpm, bact = scenario_baselines(minutes, n_workloads)
+    if baseline_pod_minutes is not None:
+        bpm = jnp.asarray(baseline_pod_minutes, jnp.float32)
+    if baseline_actions is not None:
+        bact = jnp.asarray(baseline_actions, jnp.float32)
+
+    v = jnp.asarray(violation_rate, jnp.float32)
+    pm = jnp.asarray(pod_minutes, jnp.float32)
+    act = jnp.asarray(scaling_actions, jnp.float32)
+
+    s_slo = jnp.clip(1.0 - v, 0.0, 1.0)
+    s_eff = jnp.clip(1.0 / jnp.maximum(pm / jnp.maximum(bpm, EPS), EPS),
+                     0.0, 1.0)
+    s_stab = jnp.clip(1.0 / jnp.maximum(act / jnp.maximum(bact, EPS), EPS),
+                      0.0, 1.0)
+    w = jnp.asarray(weights, jnp.float32)
+    return REIBreakdown(s_slo, s_eff, s_stab,
+                        w[..., 0] * s_slo + w[..., 1] * s_eff
+                        + w[..., 2] * s_stab)
+
+
+def sensitivity(violation_rate, pod_minutes, scaling_actions, *,
+                delta: float = 0.05, weights=DEFAULT_WEIGHTS,
+                **kw) -> REIBreakdown:
+    """REI under the paper's 6 weight perturbations of +/- delta (§V.D),
+    batched: every returned field gains a leading [6] axis over
+    `SENSITIVITY_DELTAS`."""
+    a, b, g = weights
+    ws = jnp.asarray([[a + da * delta, b + db * delta, g + dg * delta]
+                      for da, db, dg in SENSITIVITY_DELTAS], jnp.float32)
+    base = rei(violation_rate, pod_minutes, scaling_actions,
+               weights=(1.0, 0.0, 0.0), **kw)   # scores only
+    expand = (6,) + (1,) * jnp.ndim(base.s_slo)
+    s = jax.tree.map(lambda x: jnp.broadcast_to(
+        x, (6,) + jnp.shape(x)), REIBreakdown(
+            base.s_slo, base.s_eff, base.s_stab, base.rei))
+    w0, w1, w2 = (ws[:, i].reshape(expand) for i in range(3))
+    return REIBreakdown(s.s_slo, s.s_eff, s.s_stab,
+                        w0 * s.s_slo + w1 * s.s_eff + w2 * s.s_stab)

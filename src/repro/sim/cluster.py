@@ -30,7 +30,7 @@ from repro.scaling.api import (Controller, LimiterState, Obs,
                                apply_decision, limiter_init)
 
 __all__ = ["Controller", "Obs", "SimConfig", "SimState", "MinuteOut",
-           "simulate", "make_simulator"]
+           "initial_state", "minute_step", "simulate", "make_simulator"]
 
 EPSF = 1e-9
 
@@ -178,10 +178,11 @@ def _minute(cfg: SimConfig, controller: Controller, carry,
     return (state, minute_idx + 1), m
 
 
-def simulate(rates_per_min: jax.Array, controller: Controller,
-             cfg: SimConfig = SimConfig()) -> MinuteOut:
-    """Simulate one workload. rates_per_min [M] -> MinuteOut of [M] arrays."""
-    state = SimState(
+def initial_state(controller: Controller,
+                  cfg: SimConfig = SimConfig()) -> SimState:
+    """The t=0 plant state every simulation path starts from (the scan in
+    `simulate` and the fused metrics scan in `repro.evals.metrics`)."""
+    return SimState(
         ready=jnp.float32(cfg.initial_replicas),
         pipeline=jnp.zeros((cfg.startup_sec,), jnp.float32),
         queue=jnp.float32(0.0),
@@ -190,9 +191,21 @@ def simulate(rates_per_min: jax.Array, controller: Controller,
         lim=limiter_init(),
         rate_history=jnp.zeros((cfg.history_len,), jnp.float32),
         ctrl_state=controller.init())
+
+
+#: Public minute-granularity step: carry=(SimState, minute_idx) -> per-
+#: minute MinuteOut scalars. `repro.evals.metrics` scans this directly to
+#: accumulate metrics in-carry without materializing [M] outputs.
+minute_step = _minute
+
+
+def simulate(rates_per_min: jax.Array, controller: Controller,
+             cfg: SimConfig = SimConfig()) -> MinuteOut:
+    """Simulate one workload. rates_per_min [M] -> MinuteOut of [M] arrays."""
     (state, _), out = jax.lax.scan(
         partial(_minute, cfg, controller),
-        (state, jnp.int32(0)), rates_per_min.astype(jnp.float32))
+        (initial_state(controller, cfg), jnp.int32(0)),
+        rates_per_min.astype(jnp.float32))
     return out
 
 

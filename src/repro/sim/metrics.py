@@ -2,6 +2,12 @@
 (§IV.D): performance (SLO violation rate, cold starts, P95/P99 response),
 efficiency (replica-minutes, avg CPU utilization, over-provisioning rate),
 stability (oscillations, mean interval between scaling actions).
+
+This NumPy module is the host-side *oracle*: the device-side
+implementation in ``repro.evals.metrics`` (jnp, vmap-able, in-scan
+histogram quantiles) is pinned bit-close to it by tests/test_evals.py.
+Pipelines that evaluate many cells should go through ``repro.evals``;
+this stays the ground truth for a single MinuteOut.
 """
 from __future__ import annotations
 
@@ -36,12 +42,26 @@ class EpisodeMetrics:
 
 def _weighted_quantile(values: np.ndarray, weights: np.ndarray,
                        q: float) -> float:
-    if weights.sum() <= 0:
+    """Inverted-CDF weighted quantile: the smallest value whose cumulative
+    weight reaches q * total. With unit weights this equals
+    ``np.percentile(values, 100 * q, method="inverted_cdf")`` (pinned by
+    tests/test_evals.py). Degenerate inputs (empty, non-finite or
+    non-positive total weight) return 0.0; q is clipped to [0, 1]; and the
+    target is kept strictly positive so zero-weight values at either end
+    of the sort order are never selected."""
+    values = np.asarray(values, np.float64).reshape(-1)
+    weights = np.asarray(weights, np.float64).reshape(-1)
+    if values.size == 0:
         return 0.0
-    order = np.argsort(values)
+    total = weights.sum()
+    if not np.isfinite(total) or total <= 0:
+        return 0.0
+    q = float(np.clip(q, 0.0, 1.0))
+    order = np.argsort(values, kind="stable")
     v, w = values[order], weights[order]
     cw = np.cumsum(w)
-    idx = np.searchsorted(cw, q * cw[-1])
+    target = min(max(q * total, np.finfo(np.float64).tiny), total)
+    idx = int(np.searchsorted(cw, target, side="left"))
     return float(v[min(idx, len(v) - 1)])
 
 

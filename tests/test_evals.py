@@ -1,0 +1,312 @@
+"""The repro.evals evaluation plane: device-vs-host metric parity
+(including the P95/P99 histogram approximation bound), the
+_weighted_quantile oracle vs np.percentile, scenario-aware REI with the
+paper's constants pinned, the fused in-scan metrics simulator, the
+policies x forecasters x scenarios x seeds matrix runner (ONE compile,
+per-cell parity with sim.metrics.aggregate), and content-addressed
+result cards (identical config -> cache hit)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypo_compat import given, settings, st
+
+from repro.evals import artifacts, matrix
+from repro.evals import metrics as EM
+from repro.evals import rei as ER
+from repro.scaling import batch, registry
+from repro.sim import metrics as M
+from repro.sim.cluster import MinuteOut, SimConfig, make_simulator
+
+CFG = SimConfig()
+
+# quantiles: half-log-bin representative error + slack for weighted-CDF
+# tie-breaks landing on a neighboring data value
+Q_RTOL = 2.5 * EM.quantile_rel_bound()
+
+
+def _random_minute_out(rng, shape):
+    """Random but *consistent* MinuteOut arrays (resp_sum really is a
+    served-weighted response sum, violated <= served, ...)."""
+    served = rng.gamma(1.5, 200.0, shape).astype(np.float32)
+    served[rng.random(shape) < 0.15] = 0.0
+    resp = rng.gamma(2.0, 0.4, shape).astype(np.float32)   # seconds
+    return MinuteOut(
+        served=served,
+        violated=(served * (rng.random(shape) < 0.3)).astype(np.float32),
+        cold_starts=rng.poisson(0.5, shape).astype(np.float32),
+        replica_seconds=rng.gamma(2.0, 300.0, shape).astype(np.float32),
+        queue_end=rng.gamma(1.0, 5.0, shape).astype(np.float32),
+        resp_sum=(resp * served).astype(np.float32),
+        resp_max=resp,
+        ups=rng.poisson(1.0, shape).astype(np.float32),
+        downs=rng.poisson(1.0, shape).astype(np.float32),
+        oscillations=rng.poisson(0.3, shape).astype(np.float32),
+        util_mean=rng.random(shape).astype(np.float32),
+        ready_mean=rng.gamma(2.0, 3.0, shape).astype(np.float32))
+
+
+def _assert_metrics_close(dev, host, *, rtol=2e-4):
+    for field in EM.EpisodeMetrics._fields:
+        d, h = float(np.asarray(getattr(dev, field))), getattr(host, field)
+        tol = Q_RTOL if field.startswith(("p95", "p99")) else rtol
+        assert d == pytest.approx(h, rel=tol, abs=1e-3), (field, d, h)
+
+
+# ----------------------------------------------- device-vs-host parity ----
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_device_metrics_match_host_aggregate(seed):
+    rng = np.random.default_rng(seed)
+    minutes = int(rng.integers(30, 200))
+    out = _random_minute_out(rng, (3, minutes))
+    dev = EM.compute(out)                                  # fields [3]
+    for w in range(3):
+        host = M.aggregate(MinuteOut(*[np.asarray(v)[w] for v in out]))
+        one = jax.tree.map(lambda a: a[w], dev)
+        _assert_metrics_close(one, host)
+
+
+def test_pooled_matches_workload_axis_aggregate():
+    rng = np.random.default_rng(7)
+    out = _random_minute_out(rng, (4, 120))
+    dev = EM.pooled(out)
+    host = M.aggregate(out, workload_axis=True)
+    _assert_metrics_close(dev, host)
+
+
+def test_compute_handles_extra_batch_axes():
+    rng = np.random.default_rng(8)
+    out = _random_minute_out(rng, (2, 3, 4, 60))
+    dev = EM.compute(out)
+    assert np.asarray(dev.p95_response_ms).shape == (2, 3, 4)
+    host = M.aggregate(MinuteOut(*[np.asarray(v)[1, 2, 0] for v in out]))
+    _assert_metrics_close(jax.tree.map(lambda a: a[1, 2, 0], dev), host)
+
+
+def test_fused_simulator_matches_post_hoc_and_host():
+    rng = np.random.default_rng(9)
+    rates = rng.poisson(1500, size=(2, 90)).astype(np.float32)
+    ctrl = registry.get_controller("hpa", CFG)
+    out = make_simulator(ctrl, CFG)(jnp.asarray(rates))
+    pool, per_w = EM.make_metrics_simulator(ctrl, CFG)(jnp.asarray(rates))
+    _assert_metrics_close(pool, M.aggregate(out, workload_axis=True))
+    for w, host in enumerate(M.per_workload(out)):
+        _assert_metrics_close(jax.tree.map(lambda a: a[w], per_w), host)
+
+
+# ------------------------------------------------- _weighted_quantile ----
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_weighted_quantile_matches_percentile_on_dense_weights(seed):
+    rng = np.random.default_rng(seed)
+    v = rng.gamma(2.0, 10.0, int(rng.integers(5, 400)))
+    w = np.ones_like(v)
+    for q in (0.0, 0.25, 0.5, 0.95, 0.99, 1.0):
+        got = M._weighted_quantile(v, w, q)
+        want = float(np.percentile(v, 100 * q, method="inverted_cdf"))
+        assert got == pytest.approx(want), (q, got, want)
+
+
+def test_weighted_quantile_edge_cases():
+    # degenerate inputs return 0, not index-clamped garbage
+    assert M._weighted_quantile(np.array([]), np.array([]), 0.5) == 0.0
+    v = np.array([3.0, 7.0])
+    assert M._weighted_quantile(v, np.zeros(2), 0.5) == 0.0
+    # q=0 must skip zero-weight values at the head of the sort order
+    assert M._weighted_quantile(np.array([5.0, 10.0]),
+                                np.array([0.0, 3.0]), 0.0) == 10.0
+    # q=1 must not fall past the last positively weighted value
+    assert M._weighted_quantile(np.array([5.0, 10.0]),
+                                np.array([3.0, 0.0]), 1.0) == 5.0
+    # boundaries on dense weights
+    v = np.arange(10.0)
+    w = np.ones(10)
+    assert M._weighted_quantile(v, w, 0.0) == 0.0
+    assert M._weighted_quantile(v, w, 1.0) == 9.0
+
+
+def test_hist_quantile_respects_bound():
+    rng = np.random.default_rng(3)
+    vals = rng.gamma(2.0, 0.3, 500).astype(np.float32)
+    w = rng.gamma(1.0, 100.0, 500).astype(np.float32)
+    edges = EM.response_edges()
+    hist = np.zeros(edges.shape[0], np.float32)
+    idx = np.asarray(EM._bin_index(jnp.asarray(vals), edges))
+    np.add.at(hist, idx, w)
+    for q in (0.5, 0.95, 0.99):
+        approx = float(EM._hist_quantile(jnp.asarray(hist),
+                                         EM._representatives(edges), q))
+        exact = M._weighted_quantile(vals, w, q)
+        assert approx == pytest.approx(exact, rel=Q_RTOL)
+
+
+# ------------------------------------------------------------------ REI ----
+def test_rei_paper_constants_are_the_defaults():
+    from repro.core import rei as R
+    b = R.rei(violation_rate=0.1, pod_minutes=2880.0, scaling_actions=20.0)
+    assert b.s_slo == pytest.approx(0.9)
+    assert b.s_eff == pytest.approx(0.5)    # 2880 / 1440 -> 1/2
+    assert b.s_stab == pytest.approx(0.5)   # 20 / 10 -> 1/2
+    # explicit paper constants give identical numbers
+    b2 = R.rei(0.1, 2880.0, 20.0,
+               baseline_pod_minutes=ER.PAPER_BASELINE_POD_MINUTES,
+               baseline_actions=ER.PAPER_BASELINE_ACTIONS)
+    assert b2 == b
+
+
+def test_rei_scenario_aware_baselines():
+    bpm, bact = ER.scenario_baselines(720, 4)
+    assert float(bpm) == pytest.approx(2880.0)   # 4 pods x half a day
+    assert float(bact) == pytest.approx(20.0)    # 10 x 0.5 x 4
+    # a 4-workload half-day using exactly one pod per workload scores
+    # s_eff = 1 under the scenario-aware baseline, 0.5 under the paper's
+    aware = ER.rei(0.0, 2880.0, 20.0, minutes=720, n_workloads=4)
+    paper = ER.rei(0.0, 2880.0, 20.0)
+    assert float(aware.s_eff) == pytest.approx(1.0)
+    assert float(paper.s_eff) == pytest.approx(0.5)
+
+
+def test_rei_batched_shapes_and_sensitivity():
+    v = np.full((3, 2, 4), 0.05, np.float32)
+    pm = np.full((3, 2, 4), 2000.0, np.float32)
+    act = np.full((3, 2, 4), 15.0, np.float32)
+    b = ER.rei(v, pm, act)
+    assert np.asarray(b.rei).shape == (3, 2, 4)
+    s = ER.sensitivity(v, pm, act)
+    assert np.asarray(s.rei).shape == (6, 3, 2, 4)
+    base = ER.rei(0.05, 2000.0, 15.0).rei
+    assert np.max(np.abs(np.asarray(s.rei) - float(base))) < 0.1
+
+
+# ------------------------------------------------------- matrix runner ----
+ACCEPT_SPEC = matrix.spec(
+    "t_matrix",
+    policies=("hpa", "kpa", "predictive", "aapa"),
+    forecasters=("holt_winters", "ewma"),
+    scenarios=(("burst_storm", {}), ("idle_wake", {}),
+               ("archetype_mix", {})),
+    seeds=(0, 1), n_workloads=2, minutes=60)
+
+
+def test_matrix_one_compile_per_cell_parity():
+    """The acceptance matrix: 4 policies x 2 forecasters x 3 scenarios x
+    2 seeds in ONE compiled call, every cell matching the host oracle."""
+    rates = matrix.build_rates(ACCEPT_SPEC)
+    assert rates.shape == (3, 2, 2, 60)
+    runner = matrix.make_runner(ACCEPT_SPEC)
+    pool, per_w = runner(rates)
+    assert runner._cache_size() == 1              # one compile, one call
+    assert np.asarray(pool.slo_violation_rate).shape == (3, 2, 2, 4)
+    assert np.asarray(per_w.slo_violation_rate).shape == (3, 2, 2, 4, 2)
+
+    cfg = ACCEPT_SPEC.sim_config()
+    sim = batch.make_batch_simulator(matrix.controllers(ACCEPT_SPEC), cfg)
+    for s in range(3):
+        for z in range(2):
+            out = sim(jnp.asarray(rates[s, z]))   # [F*P, W, M]
+            for f in range(2):
+                for p in range(4):
+                    host = M.aggregate(
+                        jax.tree.map(lambda a: a[f * 4 + p], out),
+                        workload_axis=True)
+                    cell = jax.tree.map(lambda a: a[s, z, f, p], pool)
+                    _assert_metrics_close(cell, host)
+
+
+def test_matrix_run_is_content_addressed_cache_hit(tmp_path, monkeypatch):
+    run1 = matrix.run(ACCEPT_SPEC, root=tmp_path)
+    assert not run1.cached
+    assert (tmp_path / f"t_matrix-{run1.card['hash']}"
+            / "result.npz").exists()
+
+    def boom(*a, **k):
+        raise AssertionError("cache hit must not re-execute the matrix")
+
+    monkeypatch.setattr(matrix, "_execute", boom)
+    run2 = matrix.run(ACCEPT_SPEC, root=tmp_path)
+    assert run2.cached and run2.card["hash"] == run1.card["hash"]
+    np.testing.assert_allclose(run2.result.pooled.slo_violation_rate,
+                               run1.result.pooled.slo_violation_rate,
+                               rtol=1e-6)
+    np.testing.assert_allclose(run2.result.rei.rei, run1.result.rei.rei,
+                               rtol=1e-6)
+    # a different classifier id is a different address
+    key2 = dict(ACCEPT_SPEC.content_key(), classifier="other")
+    assert artifacts.card_hash(key2) != run1.card["hash"]
+    # tables render from the loaded result too
+    assert "| policy |" in artifacts.policy_table(run2.result, ACCEPT_SPEC)
+
+
+def test_matrix_force_rerun_refreshes_the_artifact(tmp_path):
+    """force=True must replace the on-disk card, not silently keep the
+    stale one via the same-address race rule."""
+    import time
+    sp = matrix.spec("t_force", policies=("hpa",),
+                     scenarios=("idle_wake",), seeds=(0,),
+                     n_workloads=2, minutes=60)
+    run1 = matrix.run(sp, root=tmp_path)
+    card = tmp_path / f"t_force-{run1.card['hash']}" / "card.json"
+    before = card.stat().st_mtime
+    time.sleep(0.05)
+    run2 = matrix.run(sp, root=tmp_path, force=True)
+    assert not run2.cached
+    assert card.stat().st_mtime > before
+
+
+def test_matrix_rei_uses_scenario_baselines(tmp_path):
+    sp = matrix.spec("t_rei", policies=("hpa",), scenarios=("idle_wake",),
+                     seeds=(0,), n_workloads=2, minutes=60)
+    run = matrix.run(sp, root=tmp_path)
+    m, r = run.result.pooled, run.result.rei
+    want = ER.rei(m.slo_violation_rate, m.replica_minutes,
+                  m.scaling_actions, minutes=60, n_workloads=2)
+    np.testing.assert_allclose(np.asarray(r.rei), np.asarray(want.rei),
+                               rtol=1e-6)
+
+
+def test_evaluate_controllers_matches_matrix_path():
+    rng = np.random.default_rng(5)
+    rates = rng.poisson(900, size=(2, 60)).astype(np.float32)
+    ctrls = [registry.get_controller(n, CFG) for n in ("hpa", "kpa")]
+    pool, per_w = matrix.evaluate_controllers(ctrls, rates, CFG)
+    assert np.asarray(pool.slo_violation_rate).shape == (2,)
+    assert np.asarray(per_w.slo_violation_rate).shape == (2, 2)
+    out = batch.batch_simulate(ctrls, jnp.asarray(rates), CFG)
+    for i in range(2):
+        host = M.aggregate(jax.tree.map(lambda a: a[i], out),
+                           workload_axis=True)
+        _assert_metrics_close(jax.tree.map(lambda a: a[i], pool), host)
+
+
+def test_matrix_requires_classifier_id_for_custom_classify():
+    with pytest.raises(ValueError):
+        matrix.run(ACCEPT_SPEC, classify=lambda f: None)
+
+
+def test_save_card_round_trip(tmp_path):
+    key = {"bench": "latency", "batch": 4096}
+    card = artifacts.save_card("t_card", key, {"ms": 2.3}, root=tmp_path)
+    assert artifacts.is_cached("t_card", key, tmp_path)
+    assert card["hash"] == artifacts.card_hash(key)
+    assert (tmp_path / f"t_card-{card['hash']}" / "card.json").exists()
+
+
+# ------------------------------------------------------- nightly scale ----
+@pytest.mark.slow
+def test_matrix_full_scale_nightly(tmp_path):
+    """Every policy x every forecaster on day-long scenarios."""
+    from repro.forecast import registry as forecast_registry
+    sp = matrix.spec(
+        "t_full", policies=tuple(registry.available()),
+        forecasters=tuple(forecast_registry.available()),
+        scenarios=(("archetype_mix", {}), ("burst_storm", {}),
+                   ("diurnal_ramp", {})),
+        seeds=(0, 1), n_workloads=8, minutes=1440)
+    run = matrix.run(sp, root=tmp_path)
+    S, Z, F, P = sp.shape
+    assert np.asarray(run.result.pooled.slo_violation_rate).shape == \
+        (S, Z, F, P)
+    assert np.isfinite(np.asarray(run.result.rei.rei)).all()
+    # per-archetype/per-scenario tables render
+    assert "| scenario |" in run.card["tables"]["per_scenario"]

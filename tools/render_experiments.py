@@ -1,6 +1,7 @@
-"""Render §Dry-run-summary / §Roofline-summary / §Perf-hillclimb markdown
-tables from the experiment JSONs and append them to EXPERIMENTS.md
-(replacing everything after the AUTOGEN marker)."""
+"""Render §Eval-cards / §Dry-run-summary / §Roofline-summary /
+§Perf-hillclimb markdown tables from the experiment JSONs and the
+content-addressed `repro.evals` result cards, and append them to
+EXPERIMENTS.md (replacing everything after the AUTOGEN marker)."""
 import json
 import pathlib
 
@@ -11,6 +12,34 @@ MARKER = "<!-- AUTOGEN SECTIONS BELOW: dryrun-summary / roofline-summary / hillc
 def load(p):
     p = ROOT / p
     return json.loads(p.read_text()) if p.exists() else {}
+
+
+def evals_tables():
+    """One section per `repro.evals` result card under experiments/evals:
+    the pre-rendered paper tables (Table IV-style policy comparison,
+    Fig 2-style per-scenario breakdown, §V.D REI sensitivity), each
+    addressed by its content hash."""
+    root = ROOT / "experiments/evals"
+    cards = sorted(root.glob("*/card.json")) if root.exists() else []
+    lines = ["\n## §Eval-cards (content-addressed `repro.evals` runs)\n"]
+    if not cards:
+        lines.append("(no result cards yet — run `benchmarks/run.py` or "
+                     "`repro.evals.matrix.run`)")
+        return "\n".join(lines)
+    for path in cards:
+        card = json.loads(path.read_text())
+        name = path.parent.name
+        tables = card.get("tables")
+        if tables:
+            lines.append(f"\n### {name}\n")
+            for title, table in tables.items():
+                lines.append(f"\n**{title}**\n\n{table}\n")
+        else:   # schema-light save_card payloads: one summary line
+            payload = card.get("payload", {})
+            keys = ", ".join(f"{k}={v}" for k, v in sorted(payload.items())
+                             if isinstance(v, (int, float, str)))
+            lines.append(f"\n### {name}\n\n{keys or '(payload in card)'}\n")
+    return "\n".join(lines)
 
 
 def dryrun_table():
@@ -111,10 +140,10 @@ def hillclimb_table():
 
 def main():
     p = ROOT / "EXPERIMENTS.md"
-    text = p.read_text()
+    text = p.read_text() if p.exists() else f"# Experiments\n\n{MARKER}\n"
     head = text.split(MARKER)[0] + MARKER + "\n"
-    p.write_text(head + dryrun_table() + "\n" + roofline_table() + "\n"
-                 + hillclimb_table() + "\n")
+    p.write_text(head + evals_tables() + "\n" + dryrun_table() + "\n"
+                 + roofline_table() + "\n" + hillclimb_table() + "\n")
     print("EXPERIMENTS.md updated")
 
 
