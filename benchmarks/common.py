@@ -43,9 +43,29 @@ def get_trained(verbose: bool = False) -> pipeline.TrainedAAPA:
     return trained
 
 
+_RECORDS: list[dict] | None = None
+
+
+def start_capture() -> None:
+    """Begin collecting emitted records (benchmarks/run.py --json)."""
+    global _RECORDS
+    _RECORDS = []
+
+
+def drain_capture() -> list[dict]:
+    """Return records emitted since start_capture and stop collecting."""
+    global _RECORDS
+    records, _RECORDS = _RECORDS or [], None
+    return records
+
+
 def emit(name: str, us_per_call: float, derived: str, payload=None):
     """CSV line per the harness contract + JSON sidecar."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _RECORDS is not None:
+        _RECORDS.append({"name": name,
+                         "us_per_call": round(float(us_per_call), 1),
+                         "derived": derived})
     if payload is not None:
         BENCH_OUT.mkdir(parents=True, exist_ok=True)
         with open(BENCH_OUT / f"{name}.json", "w") as f:

@@ -1,17 +1,44 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   python -m benchmarks.run [bench] [--smoke] [--json DIR]
+#
+# --json DIR writes each bench's emitted records to DIR/BENCH_<bench>.json
+# (stable schema, sorted keys) so perf numbers diff across PRs; --smoke
+# asks benches that support it (bench_sim) for a seconds-scale variant —
+# the CI tier-1 smoke uploads BENCH_sim.json as a workflow artifact.
 from __future__ import annotations
 
+import inspect
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def _write_json(out_dir: pathlib.Path, bench: str, records: list,
+                elapsed_s: float, failed: bool, smoke: bool) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    doc = {"schema": BENCH_SCHEMA_VERSION, "bench": bench,
+           "smoke": smoke, "elapsed_s": round(elapsed_s, 3),
+           "failed": failed, "records": records}
+    path = out_dir / f"BENCH_{bench}.json"
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, default=float)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
 
 
 def main() -> None:
     from benchmarks import (bench_aapaset, bench_autoscaling,
                             bench_classification, bench_labeling,
                             bench_latency, bench_pipeline_perf, bench_rei,
-                            bench_roofline, bench_uncertainty)
+                            bench_roofline, bench_sim, bench_uncertainty)
+    from benchmarks import common
     benches = [
+        ("sim", bench_sim),
         ("aapaset", bench_aapaset),
         ("labeling", bench_labeling),
         ("classification", bench_classification),
@@ -22,19 +49,42 @@ def main() -> None:
         ("pipeline_perf", bench_pipeline_perf),
         ("roofline", bench_roofline),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_dir: pathlib.Path | None = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("--json needs a directory argument")
+        json_dir = pathlib.Path(argv[i + 1])
+        del argv[i:i + 2]
+    argv = [a for a in argv if a != "--smoke"]
+    only = argv[0] if argv else None
+
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in benches:
         if only and only != name:
             continue
+        kwargs = {}
+        if smoke and "smoke" in inspect.signature(mod.main).parameters:
+            kwargs["smoke"] = True
         t0 = time.time()
+        failed = False
+        common.start_capture()
         try:
-            mod.main()
+            mod.main(**kwargs)
         except Exception:
             failures += 1
+            failed = True
             traceback.print_exc()
             print(f"{name},0.0,FAILED")
+        records = common.drain_capture()
+        if json_dir is not None:
+            # a bench without a smoke variant ran its full workload even
+            # under --smoke; label its records accordingly
+            _write_json(json_dir, name, records, time.time() - t0, failed,
+                        bool(kwargs.get("smoke", False)))
         print(f"# [{name}] {time.time()-t0:.0f}s", flush=True)
     if failures:
         sys.exit(1)

@@ -3,9 +3,11 @@
 ``spec(...)`` names an evaluation matrix (which policies, which
 forecasters, which scenarios at which seeds, on which plant);
 ``make_runner(spec)`` compiles the whole grid into a single jitted
-function built on ``repro.scaling.batch.stack_controllers`` and the
-fused in-scan metrics of ``repro.evals.metrics`` — per-minute outputs
-never materialize, each cell returns EpisodeMetrics directly; and
+function — one control-period-blocked scan per controller lane (exactly
+one `decide` per control step, the same O(P) layout as
+``repro.scaling.batch.make_batch_simulator``) fused with the in-scan
+metrics of ``repro.evals.metrics`` — per-minute outputs never
+materialize, each cell returns EpisodeMetrics directly; and
 ``run(spec)`` is the front door: content-addressed against
 ``experiments/evals`` (same hashing scheme as ``aapaset.manifest``), so
 re-running an identical spec is a cache hit on the result card.
@@ -150,14 +152,34 @@ def build_rates(spec_: MatrixSpec) -> np.ndarray:
 
 
 def _lane_runner(ctrls, cfg, edges):
-    """(lane index, rates [W, M]) -> per-workload MetricAccums, with the
-    selected controller's decisions driving the plant — the shared core
-    of the matrix runner and the ad-hoc controller evaluator."""
-    def lane(idx, rates_w):
-        ctrl = batch.stack_controllers(ctrls, idx)
-        return jax.vmap(
-            lambda r: EM.simulate_accum(r, ctrl, cfg, edges))(rates_w)
-    return lane
+    """rates [W, M] -> MetricAccums of [L, W, ...] leaves: ONE blocked
+    scan advances all L x W fused plant lanes with exactly one `decide`
+    per controller per control step (`scaling.batch.make_batch_minute_
+    step`), folding each minute into per-lane MetricAccums in the scan
+    carry — the shared core of the matrix runner and the ad-hoc
+    controller evaluator. Memory stays O(bins) per lane."""
+    n_lanes = len(ctrls)
+    step = batch.make_batch_minute_step(ctrls, cfg)
+    fold = jax.vmap(lambda a, m: EM.accum_update(a, m, edges))
+
+    def lanes(rates_w):
+        W, _ = rates_w.shape
+        acc0 = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_lanes * W,) + a.shape),
+            EM.accum_init(edges.shape[0]))
+
+        def body(carry, rate_w):
+            st, idx, acc = carry
+            st, m = step(st, idx, rate_w)
+            return (st, idx + 1, fold(acc, m)), None
+
+        (_, _, acc), _ = jax.lax.scan(
+            body,
+            (batch.batch_initial_state(ctrls, W, cfg), jnp.int32(0), acc0),
+            rates_w.T)
+        return jax.tree.map(
+            lambda a: a.reshape((n_lanes, W) + a.shape[1:]), acc)
+    return lanes
 
 
 def make_runner(spec_: MatrixSpec, classify=None):
@@ -167,12 +189,9 @@ def make_runner(spec_: MatrixSpec, classify=None):
     cfg = spec_.sim_config()
     ctrls = controllers(spec_, classify)
     edges = EM.response_edges(spec_.bins, cfg.resp_cap_sec)
-    idxs = jnp.arange(len(ctrls), dtype=jnp.int32)
     _, _, f_axis, p_axis = spec_.shape
 
-    lane = _lane_runner(ctrls, cfg, edges)
-    cell = jax.vmap(lane, in_axes=(0, None))     # [L, W, ...]
-    over_seeds = jax.vmap(lambda r: cell(idxs, r))
+    over_seeds = jax.vmap(_lane_runner(ctrls, cfg, edges))
     over_scenarios = jax.vmap(over_seeds)        # [S, Z, L, W, ...]
 
     def run_fn(rates):
@@ -196,11 +215,10 @@ def make_controller_evaluator(ctrls: Sequence,
     sweeping many rate tensors — each call reuses the one compile."""
     ctrls = list(ctrls)
     edges = EM.response_edges(bins, cfg.resp_cap_sec)
-    idxs = jnp.arange(len(ctrls), dtype=jnp.int32)
-    lane = _lane_runner(ctrls, cfg, edges)
+    lanes = _lane_runner(ctrls, cfg, edges)
 
     def run_fn(rates_w):
-        accs = jax.vmap(lane, in_axes=(0, None))(idxs, rates_w)
+        accs = lanes(rates_w)
         return (EM.finalize(jax.tree.map(lambda a: a.sum(1), accs), edges),
                 EM.finalize(accs, edges))
 

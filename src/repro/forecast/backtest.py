@@ -3,10 +3,12 @@
 Conformal calibration and the forecast benchmarks replay every candidate
 forecaster over every trace. Running `forecaster.smooth` per model costs
 one compile and one dispatch per forecaster; here the models' states ride
-in one scan carry (the ``repro.scaling.batch.stack_controllers`` trick
-applied to forecasters), so the whole F x B x T backtest is one compile
-and one dispatch. Lane f's predictions are exactly the streaming path of
-forecaster f alone (`stream_smooth`, pinned by test).
+in one scan carry (every-lane-evaluates-all-F — fine for forecasters,
+whose updates are a handful of FLOPs; the heterogeneous-controller batch
+in ``repro.scaling.batch`` outgrew the same design because `decide`s are
+not), so the whole F x B x T backtest is one compile and one dispatch.
+Lane f's predictions are exactly the streaming path of forecaster f
+alone (`stream_smooth`, pinned by test).
 """
 from __future__ import annotations
 

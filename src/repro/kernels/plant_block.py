@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: fused cluster-plant control-period advance.
+
+The control-period-blocked simulator (`repro.sim.cluster`) runs
+`controller.decide` once per block and then `n_ticks` of pure plant
+dynamics — startup-pipeline pop, fluid queue, response model, utilization
+EMA, limiter cooldown decay. Those plant ticks are the hot loop of every
+paper table, and they are elementwise over lanes (one lane = one
+simulated workload), so the TPU mapping is: one grid step per tile of
+``TILE_B`` lanes held in VMEM sublanes, the tick loop inside the kernel
+(``lax.fori_loop``), the startup pipeline kept as a ``(TILE_B,
+startup_sec)`` VMEM tile shifted one slot per tick — the whole control
+period advances without touching HBM.
+
+Oracle: ``repro.sim.cluster.plant_block_ref`` (the same math the CPU
+blocked path runs; see ref.py). Parity is property-tested in
+tests/test_kernel_properties.py over random lane tiles, startup depths,
+and tick counts, including non-multiple-of-tile batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPSF = 1e-9
+
+#: packed lane-state column order (matches `plant_tick_block` args)
+STATE_COLS = ("ready", "queue", "wait_sum", "util_ema", "cooldown",
+              "pipe_sum", "arrivals")
+
+
+def _kernel(state_ref, pipe_ref, st_out_ref, pipe_out_ref, served_ref,
+            viol_ref, cold_ref, total_ref, resp_ref, util_ref, ready_ref,
+            *, n_ticks: int, rps_per_replica: float, service_sec: float,
+            slo_sec: float, resp_cap_sec: float, metric_tau_sec: float):
+    """state_ref: (TILE_B, 7) packed lane state (STATE_COLS order);
+    pipe_ref: (TILE_B, S) startup pipeline; per-tick outputs (TILE_B, T)."""
+    tile_b, S = pipe_ref.shape
+    arrivals = state_ref[:, 6:7]                     # (TILE_B, 1)
+
+    def body(t, carry):
+        ready, pipe, queue, wait, util_ema, cool, ps = carry
+        # pods finishing startup: pop slot 0, shift the pipeline
+        popped = pipe[:, 0:1]
+        ready = ready + popped
+        pipe = jnp.concatenate(
+            [pipe[:, 1:], jnp.zeros((tile_b, 1), jnp.float32)], axis=1)
+        ps = jnp.maximum(ps - popped, 0.0)
+
+        # fluid FIFO queue with queue-age tracking (identical div-form math
+        # as cluster._flow_tick — see its FMA-stability note)
+        throughput = ready * rps_per_replica
+        work = queue + arrivals
+        served = jnp.minimum(work, throughput)
+        new_queue = work - served
+        wait_aged = wait + queue
+        mean_age = wait_aged / jnp.maximum(work, EPSF)
+        wait = wait_aged * new_queue / jnp.maximum(work, EPSF)
+        util = served / jnp.maximum(throughput, EPSF)
+        resp = (service_sec / jnp.maximum(1.0 - util, 0.05) + mean_age
+                + (0.5 * new_queue) / jnp.maximum(throughput, EPSF))
+        resp = jnp.minimum(resp, resp_cap_sec)
+        resp = jnp.where(served > 0, resp, 0.0)
+        viol = jnp.where(resp > slo_sec, served, 0.0)
+        cold = jnp.where(ready < 0.5, arrivals, 0.0)
+
+        # metric EMA + limiter cooldown decay (no decisions in a block)
+        util_ema = util_ema + (util - util_ema) / metric_tau_sec
+        cool = jnp.maximum(cool - 1.0, 0.0)
+
+        served_ref[:, pl.dslice(t, 1)] = served
+        viol_ref[:, pl.dslice(t, 1)] = viol
+        cold_ref[:, pl.dslice(t, 1)] = cold
+        total_ref[:, pl.dslice(t, 1)] = ready + ps
+        resp_ref[:, pl.dslice(t, 1)] = resp
+        util_ref[:, pl.dslice(t, 1)] = util
+        ready_ref[:, pl.dslice(t, 1)] = ready
+        return ready, pipe, new_queue, wait, util_ema, cool, ps
+
+    carry0 = (state_ref[:, 0:1], pipe_ref[:, :], state_ref[:, 1:2],
+              state_ref[:, 2:3], state_ref[:, 3:4], state_ref[:, 4:5],
+              state_ref[:, 5:6])
+    ready, pipe, queue, wait, util_ema, cool, ps = jax.lax.fori_loop(
+        0, n_ticks, body, carry0)
+    st_out_ref[:, :] = jnp.concatenate(
+        [ready, queue, wait, util_ema, cool, ps, arrivals], axis=1)
+    pipe_out_ref[:, :] = pipe
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_ticks", "rps_per_replica", "service_sec",
+                              "slo_sec", "resp_cap_sec", "metric_tau_sec",
+                              "tile_b", "interpret"))
+def plant_block_kernel(ready: jax.Array, pipeline: jax.Array,
+                       queue: jax.Array, wait_sum: jax.Array,
+                       util_ema: jax.Array, cooldown: jax.Array,
+                       pipe_sum: jax.Array, arrivals: jax.Array, *,
+                       n_ticks: int, rps_per_replica: float = 20.0,
+                       service_sec: float = 0.1, slo_sec: float = 0.5,
+                       resp_cap_sec: float = 600.0,
+                       metric_tau_sec: float = 60.0, tile_b: int = 8,
+                       interpret: bool = True):
+    """Advance [B] plant lanes `n_ticks` seconds with no control decisions.
+
+    Same contract as the oracle ``repro.sim.cluster.plant_block_ref``:
+    returns ``(state, ticks)`` with `state` = (ready, pipeline, queue,
+    wait_sum, util_ema, cooldown, pipe_sum) after the block and `ticks` =
+    (served, violated, cold, total_replicas, resp, util, ready) of
+    [B, n_ticks].
+    """
+    B = ready.shape[0]
+    S = pipeline.shape[1]
+    n_tiles = max((B + tile_b - 1) // tile_b, 1)
+    pad_b = n_tiles * tile_b
+
+    state = jnp.zeros((pad_b, 7), jnp.float32)
+    cols = (ready, queue, wait_sum, util_ema, cooldown, pipe_sum, arrivals)
+    state = state.at[:B].set(
+        jnp.stack([c.astype(jnp.float32) for c in cols], axis=1))
+    pipe = jnp.zeros((pad_b, S), jnp.float32)
+    pipe = pipe.at[:B].set(pipeline.astype(jnp.float32))
+
+    tick_shape = jax.ShapeDtypeStruct((pad_b, n_ticks), jnp.float32)
+    row = lambda w: pl.BlockSpec((tile_b, w), lambda i: (i, 0))  # noqa: E731
+    st_out, pipe_out, *ticks = pl.pallas_call(
+        functools.partial(_kernel, n_ticks=n_ticks,
+                          rps_per_replica=rps_per_replica,
+                          service_sec=service_sec, slo_sec=slo_sec,
+                          resp_cap_sec=resp_cap_sec,
+                          metric_tau_sec=metric_tau_sec),
+        grid=(n_tiles,),
+        in_specs=[row(7), row(S)],
+        out_specs=[row(7), row(S)] + [row(n_ticks)] * 7,
+        out_shape=[jax.ShapeDtypeStruct((pad_b, 7), jnp.float32),
+                   jax.ShapeDtypeStruct((pad_b, S), jnp.float32)]
+        + [tick_shape] * 7,
+        interpret=interpret,
+    )(state, pipe)
+
+    final = (st_out[:B, 0], pipe_out[:B], st_out[:B, 1], st_out[:B, 2],
+             st_out[:B, 3], st_out[:B, 4], st_out[:B, 5])
+    return final, tuple(t[:B] for t in ticks)

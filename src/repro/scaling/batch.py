@@ -3,80 +3,229 @@
 ``make_simulator`` (one policy, vmapped workloads) compiles one scan per
 policy — benchmarks that sweep policies pay the XLA compile N times and
 dispatch N times. This module folds the policy axis into the same
-compiled scan:
+compiled call:
 
 * `make_batch_simulator(controllers, cfg)` — arbitrary (heterogeneous)
-  controllers. Every controller's state is carried in a tuple slot and
-  evolves exactly as it would standalone; a per-lane policy index selects
-  whose decision drives the plant. `jit(vmap(vmap(simulate)))` over
-  policies x workloads: one scan, one dispatch. Lane p's trajectory is
-  bit-for-bit the trajectory of controller p alone (the parity test in
-  tests/test_scaling.py pins this). Trade-off: every lane evaluates all
-  P `decide`s (O(P^2) controller flops for one compile + one dispatch) —
-  the plant dynamics dominate and P is single-digit, but for large
-  homogeneous sweeps prefer `make_grid_simulator`, which has no
-  duplicated work.
+  controllers. ONE control-period-blocked scan advances all P x W plant
+  lanes as fused vectors, and at each block head every controller runs
+  its `decide` exactly once on its own W-slice of the lanes: one
+  compile, one dispatch, exactly P (not P^2) decide evaluations per
+  control step, with the plant dynamics amortized across the whole
+  P x W batch. This replaced a design that carried every controller's
+  state in every lane and selected by index — O(P^2) duplicated
+  `decide` FLOPs per control step (benchmarks/bench_sim.py keeps that
+  shape as its measured baseline). Lane (p, w) reproduces
+  `simulate(rates[w], controllers[p])` (pinned to tolerance by
+  tests/test_scaling.py — compiled embeddings differ, so last-ulp
+  equality is not guaranteed, see tests/test_sim_blocked.py).
 
 * `make_grid_simulator(name, grid, cfg)` — same-structured controllers
   (one registry family, hyperparameters declared `stackable`). The
   hyperparameters are stacked into arrays and the *factory itself* is
-  traced with per-lane scalars, so no per-slot state duplication at all.
-  This is the cheap path for hyperparameter sweeps (target CPU, panic
-  thresholds, guardrail fractions...).
+  traced with per-lane scalars, so the policy axis is a true vmap with
+  no per-slot duplication at all. This is the cheap path for
+  hyperparameter sweeps (target CPU, panic thresholds, guardrail
+  fractions...).
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.scaling import registry
-from repro.scaling.api import Controller
-from repro.sim.cluster import MinuteOut, SimConfig, simulate
+from repro.scaling.api import (Controller, LimiterState, Obs,
+                               apply_decision)
+from repro.sim.cluster import (MinuteOut, SimConfig, advance_plant,
+                               simulate, _acc_fold, _acc_init,
+                               _apply_scaling, _flow_tick, _pop_pipeline,
+                               initial_state)
 
 
-def stack_controllers(controllers: Sequence[Controller],
-                      policy_idx) -> Controller:
-    """One Controller carrying every component's state; `policy_idx`
-    (a traced scalar) selects whose desired/cooldown drive the plant.
-    Component states evolve independently, so the selected lane's
-    dynamics are identical to running that controller alone."""
+class BatchState(NamedTuple):
+    """Plant state for P x W fused lanes (lane l = p * W + w) plus the
+    per-controller control states (leaves lead with [W])."""
+    ready: jax.Array         # [L]
+    pipeline: jax.Array      # [L, startup_sec]
+    pipe_sum: jax.Array      # [L]
+    queue: jax.Array         # [L]
+    wait_sum: jax.Array      # [L]
+    util_ema: jax.Array      # [L]
+    cooldown: jax.Array      # [L]
+    last_dir: jax.Array      # [L]
+    rate_history: jax.Array  # [W, history_len] (shared across policies)
+    ctrl: tuple              # per-controller state pytrees, leaves [W, ...]
+
+
+def batch_initial_state(ctrls, W: int, cfg: SimConfig) -> BatchState:
+    L = len(ctrls) * W
+    st = initial_state(ctrls[0], cfg)
+
+    def rep(x):
+        return jnp.broadcast_to(x, (L,) + jnp.shape(x))
+
+    return BatchState(
+        ready=rep(st.ready), pipeline=rep(st.pipeline),
+        pipe_sum=rep(st.pipe_sum), queue=rep(st.queue),
+        wait_sum=rep(st.wait_sum), util_ema=rep(st.util_ema),
+        cooldown=jnp.zeros((L,), jnp.float32),
+        last_dir=jnp.zeros((L,), jnp.float32),
+        rate_history=jnp.zeros((W, cfg.history_len), jnp.float32),
+        ctrl=tuple(jax.vmap(lambda _, c=c: c.init())(jnp.arange(W))
+                   for c in ctrls))
+
+
+def _batch_ctrl_tick(cfg, ctrls, W, state: BatchState, acc, arr_w,
+                     minute_idx):
+    """Block-head tick for all lanes: fused plant flow on [L], then each
+    controller's decide vmapped over ITS [W] slice (P decide subgraphs
+    total), then the shared scaling semantics back on [L]. The plant
+    pieces are cluster.py's own shape-agnostic helpers, so the batched
+    and single-lane dynamics cannot drift apart."""
+    ready, pipeline, pipe_sum = _pop_pipeline(
+        state.ready, state.pipeline, state.pipe_sum)
+
+    arr_l = jnp.tile(arr_w, len(ctrls))
+    (queue, wait_sum, util_ema, served, violated, cold, resp,
+     util) = _flow_tick(cfg, ready, state.queue, state.wait_sum,
+                        state.util_ema, arr_l)
+
+    total = ready + pipe_sum
+    new_ctrl, desired, cool_req = [], [], []
+    for p, c in enumerate(ctrls):
+        sl = slice(p * W, (p + 1) * W)
+        obs = Obs(ready_total=total[sl], ready=ready[sl],
+                  util_ema=util_ema[sl], queue=queue[sl], rate_rps=arr_w,
+                  rate_history=state.rate_history, minute_idx=minute_idx)
+        cs, des, coo = jax.vmap(
+            c.decide, in_axes=(0, Obs(0, 0, 0, 0, 0, 0, None)))(
+                state.ctrl[p], obs)
+        new_ctrl.append(cs)
+        desired.append(jnp.asarray(des, jnp.float32))
+        cool_req.append(jnp.broadcast_to(
+            jnp.asarray(coo, jnp.float32), (W,)))
+    desired = jnp.clip(jnp.concatenate(desired), 0.0, cfg.max_replicas)
+    cool_req = jnp.concatenate(cool_req)
+
+    lim, act = apply_decision(
+        LimiterState(cooldown=state.cooldown, last_dir=state.last_dir),
+        total, desired, cool_req, jnp.bool_(True), dt=1.0)
+    ready, pipeline, pipe_sum = _apply_scaling(ready, pipeline, pipe_sum,
+                                               act)
+
+    state = BatchState(ready=ready, pipeline=pipeline, pipe_sum=pipe_sum,
+                       queue=queue, wait_sum=wait_sum, util_ema=util_ema,
+                       cooldown=lim.cooldown, last_dir=lim.last_dir,
+                       rate_history=state.rate_history,
+                       ctrl=tuple(new_ctrl))
+    acc = _acc_fold(acc, (served, violated, cold, ready + pipe_sum, resp,
+                          util, act.scale_up.astype(jnp.float32),
+                          act.scale_down.astype(jnp.float32),
+                          act.oscillation, ready))
+    return state, acc
+
+
+def _batch_plant_block(cfg, state: BatchState, acc, arr_l, n_ticks: int):
+    """`n_ticks` decision-free ticks for all [L] lanes — exactly
+    cluster.advance_plant on the batched fields."""
+    (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
+     cool), acc = advance_plant(
+        cfg, state.ready, state.pipeline, state.pipe_sum, state.queue,
+        state.wait_sum, state.util_ema, state.cooldown, acc, arr_l,
+        n_ticks)
+    state = state._replace(
+        ready=ready, pipeline=pipeline, pipe_sum=pipe_sum, queue=queue,
+        wait_sum=wait_sum, util_ema=util_ema, cooldown=cool)
+    return state, acc
+
+
+def make_batch_minute_step(controllers: Sequence[Controller],
+                           cfg: SimConfig = SimConfig()):
+    """(BatchState carry, minute_idx, rate_w [W]) stepping function for
+    the fused P x W batch: returns per-minute MinuteOut of [L] arrays
+    (lane l = p * W + w). `repro.evals.matrix` scans this directly with
+    its metric accumulator in the carry; `make_batch_simulator` wraps it
+    for materialized [P, W, M] outputs. `decide` runs exactly once per
+    controller per control step (O(P), not O(P^2))."""
     ctrls = list(controllers)
+    ci = max(min(int(cfg.control_interval_sec), 60), 1)
+    n_full = 60 // ci
+    tail = 60 - n_full * ci
 
-    def init():
-        return tuple(c.init() for c in ctrls)
+    def step(state: BatchState, minute_idx, rate_w):
+        W = rate_w.shape[0]
+        arr_w = rate_w / 60.0
+        arr_l = jnp.tile(arr_w, len(ctrls))
+        L = len(ctrls) * W
+        acc = tuple(jnp.zeros((L,), jnp.float32) for _ in _acc_init())
 
-    def on_minute(state, hist, minute_idx):
-        return tuple(c.on_minute(s, hist, minute_idx)
-                     for c, s in zip(ctrls, state))
+        def block(st, a, n_ticks):
+            st, a = _batch_ctrl_tick(cfg, ctrls, W, st, a, arr_w,
+                                     minute_idx)
+            if n_ticks > 1:
+                st, a = _batch_plant_block(cfg, st, a, arr_l, n_ticks - 1)
+            return st, a
 
-    def decide(state, obs):
-        outs = [c.decide(s, obs) for c, s in zip(ctrls, state)]
-        new_state = tuple(o[0] for o in outs)
-        desired = jnp.stack(
-            [jnp.asarray(o[1], jnp.float32) for o in outs])[policy_idx]
-        cool = jnp.stack(
-            [jnp.asarray(o[2], jnp.float32) for o in outs])[policy_idx]
-        return new_state, desired, cool
+        if n_full == 1:
+            state, acc = block(state, acc, ci)
+        elif n_full:
+            def body(carry, _):
+                return block(*carry, ci), None
+            (state, acc), _ = jax.lax.scan(body, (state, acc), None,
+                                           length=n_full)
+        if tail:
+            state, acc = block(state, acc, tail)
 
-    name = "batch[" + ",".join(c.name for c in ctrls) + "]"
-    return Controller(name, init, on_minute, decide)
+        m = MinuteOut(
+            served=acc[0], violated=acc[1], cold_starts=acc[2],
+            replica_seconds=acc[3], queue_end=state.queue, resp_sum=acc[4],
+            resp_max=acc[5], ups=acc[6], downs=acc[7], oscillations=acc[8],
+            util_mean=acc[9] / 60.0, ready_mean=acc[10] / 60.0)
+
+        hist = jnp.concatenate(
+            [state.rate_history[:, 1:], rate_w[:, None]], axis=1)
+        ctrl = tuple(
+            jax.vmap(c.on_minute, in_axes=(0, 0, None))(s, hist,
+                                                        minute_idx + 1)
+            for c, s in zip(ctrls, state.ctrl))
+        state = state._replace(rate_history=hist, ctrl=ctrl)
+        return state, m
+
+    return step
 
 
 def make_batch_simulator(controllers: Sequence[Controller],
-                         cfg: SimConfig = SimConfig()):
-    """jit(vmap(vmap(simulate))): rates [W, M] -> MinuteOut [P, W, M]."""
+                         cfg: SimConfig = SimConfig(), *,
+                         plant_kernel: bool | None = None):
+    """jit: rates [W, M] -> MinuteOut [P, W, M]. One compile, one
+    dispatch: a single blocked scan over fused P x W plant lanes with
+    exactly P (not P^2) decide evaluations per control step.
+    (`plant_kernel` is accepted for signature parity with
+    `make_simulator`; the fused-lane batch always uses the vector plant
+    path, which IS the kernel's oracle.)"""
+    del plant_kernel
     ctrls = list(controllers)
+    P = len(ctrls)
+    step = make_batch_minute_step(ctrls, cfg)
 
-    def sim_one(idx, rates):
-        return simulate(rates, stack_controllers(ctrls, idx), cfg)
+    def run(rates):
+        rates = rates.astype(jnp.float32)
+        W, M = rates.shape
 
-    over_workloads = jax.vmap(sim_one, in_axes=(None, 0))
-    over_policies = jax.vmap(over_workloads, in_axes=(0, None))
-    idxs = jnp.arange(len(ctrls), dtype=jnp.int32)
-    return jax.jit(lambda rates: over_policies(
-        idxs, rates.astype(jnp.float32)))
+        def minute(carry, rate_w):
+            state, idx = carry
+            state, m = step(state, idx, rate_w)
+            return (state, idx + 1), m
+
+        (_, _), out = jax.lax.scan(
+            minute, (batch_initial_state(ctrls, W, cfg), jnp.int32(0)),
+            rates.T)
+        # [M, L] -> [P, W, M]
+        return jax.tree.map(
+            lambda a: jnp.moveaxis(a.reshape(M, P, W), 0, -1), out)
+
+    return jax.jit(run)
 
 
 def batch_simulate(controllers: Sequence[Controller], rates,
@@ -89,7 +238,7 @@ def make_forecast_batch_simulator(policies: Sequence[str],
                                   forecasters: Sequence,
                                   cfg: SimConfig = SimConfig(), *,
                                   classify=None, **overrides):
-    """Forecasters x policies x workloads in ONE compiled scan.
+    """Forecasters x policies x workloads in ONE compiled call.
 
     Every policy must be forecaster-aware (`takes_forecaster` in its
     registry spec: `predictive`, `aapa`, `hybrid`); `forecasters` are

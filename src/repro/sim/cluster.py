@@ -8,7 +8,43 @@ Replaces the paper's SimPy simulator (§IV.B) with the same dynamics:
 * 500 ms SLO; cold start = arrivals when zero pods are ready,
 * requests uniform within each trace minute (paper's stated simplification).
 
-Structure: outer `lax.scan` over minutes, inner `lax.scan` over 1 s ticks.
+Structure: outer `lax.scan` over minutes; inside each minute the 60 one-
+second ticks are *control-period blocked*: `controller.decide` runs once
+at each block head (the ticks where ``sec % control_interval_sec == 0``)
+and the remaining ticks advance pure plant dynamics (pipeline pop, fluid
+queue, EMA, limiter cooldown decay) in an unrolled loop that touches the
+startup pipeline array only once per block. This is bit-exact with the
+retained tick-level reference scan (``simulate_reference``) — which
+keeps the seed's decide-every-tick-and-mask SEMANTICS — because the
+masked decides were fully discarded and every masked action is an exact
+float identity; pinned by the parity suite in tests/test_sim_blocked.py.
+(The plant float ops themselves were reordered for speed and
+FMA-stability in BOTH paths — div-form response terms, fold-based minute
+aggregation, incremental pipe_sum — so absolute outputs drift at the
+~1e-6-relative level vs the literal pre-blocking implementation, which
+benchmarks/bench_sim.py reconstructs as its measured seed baseline.)
+Remainder-block semantics for `control_interval_sec` values that don't
+divide 60 (e.g. 7): the last block simply runs the leftover ``60 % ci``
+ticks after its head, so the head schedule is identical to the
+reference (`sec % ci == 0`).
+
+Two plant-cost levers keep the blocked path hot-loop cheap:
+
+* the minute aggregates fold tick-by-tick in the scan carry (strictly
+  left-to-right, shared with the reference path — a post-hoc `jnp.sum`
+  over materialized [60] outputs would fuse differently per path and
+  break bitwise parity), so per-tick outputs never materialize;
+* `SimState.pipe_sum` carries the startup-pipeline total incrementally
+  (pop subtracts, scale-up adds, scale-down rescales — the identical
+  update sequence in both paths), so plant ticks do O(1) work instead of
+  an O(startup_sec) shift + reduction per tick.
+
+On TPU the plant-only ticks of a block dispatch to the fused Pallas
+kernel ``repro.kernels.plant_block`` (whole control period advanced in
+VMEM); on CPU the blocked path below *is* the reference oracle the
+kernel is property-tested against — the same kernel/ref dual-dispatch
+pattern as `window_features` and `holt_winters`.
+
 This module is the *plant*; the control plane lives in `repro.scaling`:
 the Controller/Obs protocol and the cooldown semantics come from
 `repro.scaling.api` (re-exported here for back-compat), the policies from
@@ -30,7 +66,9 @@ from repro.scaling.api import (Controller, LimiterState, Obs,
                                apply_decision, limiter_init)
 
 __all__ = ["Controller", "Obs", "SimConfig", "SimState", "MinuteOut",
-           "initial_state", "minute_step", "simulate", "make_simulator"]
+           "advance_plant", "initial_state", "minute_step",
+           "minute_step_reference", "plant_block_ref", "simulate",
+           "simulate_reference", "make_simulator"]
 
 EPSF = 1e-9
 
@@ -55,6 +93,9 @@ class SimConfig:
 class SimState(NamedTuple):
     ready: jax.Array         # f32 ready replicas
     pipeline: jax.Array      # [startup_sec] replicas starting (FIFO)
+    pipe_sum: jax.Array      # f32 running total of `pipeline` (see module
+    #                          docstring: updated incrementally, clamped
+    #                          at 0, so plant ticks never reduce the array)
     queue: jax.Array         # f32 queued requests
     wait_sum: jax.Array      # f32 total request-seconds waited by the queue
     util_ema: jax.Array
@@ -78,96 +119,358 @@ class MinuteOut(NamedTuple):
     ready_mean: jax.Array
 
 
-def _tick(cfg: SimConfig, controller: Controller, state: SimState,
-          arrivals: jax.Array, sec_in_min: jax.Array,
-          minute_idx: jax.Array):
-    """One 1-second step. Returns (state, per-tick outputs)."""
-    # 1. pods finishing startup
-    ready = state.ready + state.pipeline[0]
-    pipeline = jnp.concatenate(
-        [state.pipeline[1:], jnp.zeros((1,), jnp.float32)])
-
-    # 2. serve FIFO queue (fluid model with queue-age tracking)
+def _flow_tick(cfg: SimConfig, ready, queue, wait_sum, util_ema, arrivals):
+    """The queue/response/EMA dynamics of one 1-second tick, after the
+    startup-pipeline pop: shared by the control tick, the plant-only
+    tick, the reference tick, and the Pallas kernel oracle."""
+    # serve FIFO queue (fluid model with queue-age tracking)
     throughput = ready * cfg.rps_per_replica          # req/s
-    work = state.queue + arrivals
+    work = queue + arrivals
     served = jnp.minimum(work, throughput)            # dt = 1 s
-    queue = work - served
+    new_queue = work - served
     # the standing queue ages 1 s; fresh arrivals have ~0 accumulated wait
-    wait_aged = state.wait_sum + state.queue
+    wait_aged = wait_sum + queue
     mean_age = wait_aged / jnp.maximum(work, EPSF)
     # served requests carry their accumulated wait; remaining queue keeps
     # a proportional share (uniform-age fluid approximation)
-    wait_sum = wait_aged * queue / jnp.maximum(work, EPSF)
+    wait_sum = wait_aged * new_queue / jnp.maximum(work, EPSF)
     # response = congestion-inflated service time (M/D/1-style 1/(1-u):
     # running hot costs latency) + accumulated wait + residual drain time
-    util_now = served / jnp.maximum(throughput, EPSF)
-    congest = 1.0 / jnp.maximum(1.0 - util_now, 0.05)  # capped at 20x
-    resp = (cfg.service_sec * congest + mean_age
-            + 0.5 * queue / jnp.maximum(throughput, EPSF))
+    util = served / jnp.maximum(throughput, EPSF)
+    # every resp term is a division result (service/capped-headroom is the
+    # M/D/1-style congestion inflation, capped at 20x service time): a
+    # product feeding an add here would be an FMA-contraction candidate,
+    # which LLVM applies per compiled program — the blocked and reference
+    # paths compile to different programs, and a contracted-vs-plain resp
+    # would break their bitwise parity (div-fed adds cannot contract)
+    resp = (cfg.service_sec / jnp.maximum(1.0 - util, 0.05)
+            + mean_age
+            + (0.5 * new_queue) / jnp.maximum(throughput, EPSF))
     resp = jnp.minimum(resp, cfg.resp_cap_sec)
     resp = jnp.where(served > 0, resp, 0.0)
-    violated = served * (resp > cfg.slo_sec)
-    cold = arrivals * (ready < 0.5)                   # zero ready pods
+    violated = jnp.where(resp > cfg.slo_sec, served, 0.0)
+    cold = jnp.where(ready < 0.5, arrivals, 0.0)      # zero ready pods
+    # metrics (util is both the congestion input and the EMA input);
+    # div-fed add for the same FMA-stability reason as resp
+    util_ema = util_ema + (util - util_ema) / cfg.metric_tau_sec
+    return new_queue, wait_sum, util_ema, served, violated, cold, resp, util
 
-    # 3. metrics
-    util_inst = served / jnp.maximum(throughput, EPSF)
-    util_ema = state.util_ema + (1.0 / cfg.metric_tau_sec) * (
-        util_inst - state.util_ema)
+
+def _pop_pipeline(ready, pipeline, pipe_sum):
+    """Pods finishing startup: pop slot 0, shift, keep the incremental
+    pipeline total non-negative. Shape-agnostic: works on one lane
+    (pipeline [S]) or a batch of lanes (pipeline [..., S])."""
+    popped = pipeline[..., 0]
+    ready = ready + popped
+    pipeline = jnp.concatenate(
+        [pipeline[..., 1:],
+         jnp.zeros(pipeline.shape[:-1] + (1,), jnp.float32)], axis=-1)
+    pipe_sum = jnp.maximum(pipe_sum - popped, 0.0)
+    return ready, pipeline, pipe_sum
+
+
+def _apply_scaling(ready, pipeline, pipe_sum, act):
+    """Turn a ScaleAction into pipeline/ready updates: starts enter the
+    pipeline tail; removals cancel starting pods first (proportional
+    rescale), then ready pods. Shape-agnostic like `_pop_pipeline`."""
+    pipeline = pipeline.at[..., -1].add(act.add)
+    pipe_sum = pipe_sum + act.add
+    n_start = pipe_sum
+    from_pipe = jnp.minimum(act.remove, n_start)
+    factor = 1.0 - from_pipe / jnp.maximum(n_start, EPSF)
+    pipeline = pipeline * factor[..., None]
+    pipe_sum = pipe_sum * factor
+    ready = jnp.maximum(ready - (act.remove - from_pipe), 0.0)
+    return ready, pipeline, pipe_sum
+
+
+def _ctrl_tick(cfg: SimConfig, controller: Controller, state: SimState,
+               arrivals: jax.Array, minute_idx: jax.Array, do_ctrl):
+    """One 1-second step with a controller decision. `do_ctrl` is the
+    Python literal True on block heads (the blocked path — the masking
+    folds away) or a traced mask (the reference path, which evaluates
+    `decide` on every tick and discards the off-interval results)."""
+    # 1. pods finishing startup
+    ready, pipeline, pipe_sum = _pop_pipeline(
+        state.ready, state.pipeline, state.pipe_sum)
+
+    # 2./3. queue + metrics
+    (queue, wait_sum, util_ema, served, violated, cold, resp,
+     util) = _flow_tick(cfg, ready, state.queue, state.wait_sum,
+                        state.util_ema, arrivals)
 
     # 4. control every control_interval_sec
-    total = ready + jnp.sum(pipeline)
-    do_ctrl = (sec_in_min % cfg.control_interval_sec) == 0
+    total = ready + pipe_sum
     obs = Obs(ready_total=total, ready=ready, util_ema=util_ema,
               queue=queue, rate_rps=arrivals,
               rate_history=state.rate_history, minute_idx=minute_idx)
-    ctrl_state_new, desired, cool_req = controller.decide(
-        state.ctrl_state, obs)
-    ctrl_state = jax.tree.map(
-        lambda new, old: jnp.where(do_ctrl, new, old),
-        ctrl_state_new, state.ctrl_state)
+    ctrl_state, desired, cool_req = controller.decide(state.ctrl_state, obs)
+    if do_ctrl is not True:
+        ctrl_state = jax.tree.map(
+            lambda new, old: jnp.where(do_ctrl, new, old),
+            ctrl_state, state.ctrl_state)
     desired = jnp.clip(desired, 0.0, cfg.max_replicas)
 
     lim, act = apply_decision(state.lim, total, desired, cool_req,
+                              jnp.bool_(True) if do_ctrl is True else
                               do_ctrl, dt=1.0)
-    pipeline = pipeline.at[-1].add(act.add)
+    ready, pipeline, pipe_sum = _apply_scaling(ready, pipeline, pipe_sum,
+                                               act)
 
-    # cancel starting pods first, then ready pods
-    n_start = jnp.sum(pipeline)
-    from_pipe = jnp.minimum(act.remove, n_start)
-    pipeline = pipeline * (1.0 - from_pipe / jnp.maximum(n_start, EPSF))
-    ready = jnp.maximum(ready - (act.remove - from_pipe), 0.0)
-
-    new_state = SimState(ready=ready, pipeline=pipeline, queue=queue,
-                         wait_sum=wait_sum, util_ema=util_ema,
+    new_state = SimState(ready=ready, pipeline=pipeline, pipe_sum=pipe_sum,
+                         queue=queue, wait_sum=wait_sum, util_ema=util_ema,
                          lim=lim, rate_history=state.rate_history,
                          ctrl_state=ctrl_state)
-    out = (served, violated, cold, ready + jnp.sum(pipeline), resp,
-           util_inst, act.scale_up.astype(jnp.float32),
+    out = (served, violated, cold, ready + pipe_sum, resp,
+           util, act.scale_up.astype(jnp.float32),
            act.scale_down.astype(jnp.float32), act.oscillation, ready)
     return new_state, out
 
 
-def _minute(cfg: SimConfig, controller: Controller, carry,
-            rate_this_min: jax.Array):
-    """One minute = 60 ticks + minute-boundary controller hook."""
+# ------------------------------------------------- minute accumulation ----
+#: Per-minute aggregates folded tick-by-tick in the scan carry (strictly
+#: left-to-right over the 60 ticks) instead of reduced over materialized
+#: [60] outputs — the blocked and reference paths share this fold, which
+#: is what makes them bitwise identical: a post-hoc `jnp.sum` would fuse
+#: differently over the two paths' output layouts.
+def _resp_weight(resp, served):
+    """`resp * served`, routed through a select so the accumulating add
+    cannot FMA-contract with the product (contraction decisions differ
+    between the blocked and reference compiled programs and would break
+    their bitwise parity; a select operand is not a fusable product).
+    Bit-identical to the bare product: resp is already 0 when served is."""
+    return jnp.where(served > 0, resp * served, 0.0)
+
+
+def _acc_init():
+    z = jnp.float32(0.0)
+    return (z,) * 11
+
+
+def _acc_fold(acc, out):
+    """Fold a control tick's 10-tuple (ups/downs/osc included)."""
+    (served, violated, cold, total, resp, util, ups, downs, osc,
+     ready) = out
+    return (acc[0] + served, acc[1] + violated, acc[2] + cold,
+            acc[3] + total, acc[4] + _resp_weight(resp, served),
+            jnp.maximum(acc[5], resp), acc[6] + ups, acc[7] + downs,
+            acc[8] + osc, acc[9] + util, acc[10] + ready)
+
+
+def _acc_fold_plant(acc, served, violated, cold, total, resp, util, ready):
+    """Fold a plant-only tick: ups/downs/oscillations are exactly 0.0 on
+    non-control ticks, so skipping those adds is bit-exact."""
+    return (acc[0] + served, acc[1] + violated, acc[2] + cold,
+            acc[3] + total, acc[4] + _resp_weight(resp, served),
+            jnp.maximum(acc[5], resp), acc[6], acc[7], acc[8],
+            acc[9] + util, acc[10] + ready)
+
+
+def _minute_out(acc, state: SimState) -> MinuteOut:
+    return MinuteOut(
+        served=acc[0], violated=acc[1], cold_starts=acc[2],
+        replica_seconds=acc[3], queue_end=state.queue, resp_sum=acc[4],
+        resp_max=acc[5], ups=acc[6], downs=acc[7], oscillations=acc[8],
+        util_mean=acc[9] / 60.0, ready_mean=acc[10] / 60.0)
+
+
+# --------------------------------------------------- plant-block advance ----
+def plant_block_ref(cfg: SimConfig, ready, pipeline, queue, wait_sum,
+                    util_ema, cooldown, pipe_sum, arrivals, *,
+                    n_ticks: int):
+    """Advance a lane-tile of plants `n_ticks` seconds with no control
+    decisions: the pure-jnp oracle for the fused Pallas kernel
+    (``repro.kernels.plant_block``). All state args are [B] (pipeline is
+    [B, startup_sec]); `arrivals` is the per-lane per-second rate.
+
+    Returns ``(state, ticks)`` where `state` is the tuple (ready,
+    pipeline, queue, wait_sum, util_ema, cooldown, pipe_sum) after the
+    block and `ticks` is the tuple (served, violated, cold,
+    total_replicas, resp, util, ready) of [B, n_ticks] per-tick
+    measurements."""
+    def one_lane(r, p, q, w, u, c, ps, a):
+        def body(carry, _):
+            r, p, q, w, u, c, ps = carry
+            popped = p[0]
+            r = r + popped
+            p = jnp.concatenate([p[1:], jnp.zeros((1,), jnp.float32)])
+            ps = jnp.maximum(ps - popped, 0.0)
+            q, w, u, served, violated, cold, resp, util = _flow_tick(
+                cfg, r, q, w, u, a)
+            c = jnp.maximum(c - 1.0, 0.0)
+            return ((r, p, q, w, u, c, ps),
+                    (served, violated, cold, r + ps, resp, util, r))
+        return jax.lax.scan(body, (r, p, q, w, u, c, ps), None,
+                            length=n_ticks)
+
+    state, ticks = jax.vmap(one_lane)(
+        jnp.asarray(ready, jnp.float32), jnp.asarray(pipeline, jnp.float32),
+        jnp.asarray(queue, jnp.float32), jnp.asarray(wait_sum, jnp.float32),
+        jnp.asarray(util_ema, jnp.float32),
+        jnp.asarray(cooldown, jnp.float32),
+        jnp.asarray(pipe_sum, jnp.float32),
+        jnp.asarray(arrivals, jnp.float32))
+    return state, ticks
+
+
+#: Unroll plant blocks up to this many ticks (covers control intervals
+#: through ~17 s, in particular the 15 s default); longer blocks scan
+#: (see _plant_block docstring).
+_UNROLL_MAX_TICKS = 16
+
+
+def advance_plant(cfg: SimConfig, ready, pipeline, pipe_sum, queue,
+                  wait_sum, util_ema, cooldown, acc, arrivals,
+                  n_ticks: int):
+    """`n_ticks` decision-free plant ticks with the minute accumulator
+    folded along, on one lane or any batch of lanes (shape-agnostic like
+    `_pop_pipeline`; the fused P x W batch in ``repro.scaling.batch``
+    calls this on [L] fields). Returns (updated 7-field tuple, acc).
+
+    Short blocks (the default 15 s control interval): an unrolled loop
+    that reads `pipeline[..., k]` by static index and materializes the
+    shifted pipeline array ONCE at block end — bit-identical to per-tick
+    shifting, since the popped values and the incremental `pipe_sum`
+    updates are the same floats; the n per-tick max(c-1, 0) cooldown
+    decays likewise collapse to one exact step (nothing reads the
+    limiter inside a block; c-1 is exact in the f32 range cooldowns live
+    in, and both forms clamp to 0). Long blocks fall back to a per-tick
+    lax.scan (same floats again; unrolling 40+ tick bodies was observed
+    to perturb LLVM's scheduling of the resp math enough to cost
+    last-ulp parity with the reference — and the decide savings already
+    dominate at such long control intervals)."""
+    S = pipeline.shape[-1]
+    if n_ticks > _UNROLL_MAX_TICKS:
+        def body(carry, _):
+            ready, pipeline, pipe_sum, queue, wait_sum, util_ema, a = carry
+            ready, pipeline, pipe_sum = _pop_pipeline(ready, pipeline,
+                                                      pipe_sum)
+            (queue, wait_sum, util_ema, served, violated, cold, resp,
+             util) = _flow_tick(cfg, ready, queue, wait_sum, util_ema,
+                                arrivals)
+            a = _acc_fold_plant(a, served, violated, cold,
+                                ready + pipe_sum, resp, util, ready)
+            return (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
+                    a), None
+        carry0 = (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
+                  acc)
+        (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
+         acc), _ = jax.lax.scan(body, carry0, None, length=n_ticks)
+    else:
+        pipe0 = pipeline
+        for k in range(n_ticks):
+            if k < S:
+                popped = pipe0[..., k]
+                ready = ready + popped
+                # the shift-based form pops 0.0 once the pipeline has
+                # fully drained (k >= S); max(ps - 0, 0) == ps for
+                # ps >= 0, so the skip is exact
+                pipe_sum = jnp.maximum(pipe_sum - popped, 0.0)
+            (queue, wait_sum, util_ema, served, violated, cold, resp,
+             util) = _flow_tick(cfg, ready, queue, wait_sum, util_ema,
+                                arrivals)
+            acc = _acc_fold_plant(acc, served, violated, cold,
+                                  ready + pipe_sum, resp, util, ready)
+        if n_ticks < S:
+            pipeline = jnp.concatenate(
+                [pipe0[..., n_ticks:],
+                 jnp.zeros(pipe0.shape[:-1] + (n_ticks,), jnp.float32)],
+                axis=-1)
+        else:
+            pipeline = jnp.zeros_like(pipe0)
+    cooldown = jnp.maximum(cooldown - float(n_ticks), 0.0)
+    return (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
+            cooldown), acc
+
+
+def _plant_block(cfg: SimConfig, state: SimState, acc,
+                 arrivals: jax.Array, n_ticks: int, use_kernel: bool):
+    """`n_ticks` plant-only ticks folded into the minute accumulator.
+    CPU/ref: `advance_plant` (the kernel's parity oracle semantics).
+    TPU: one fused `plant_tick_block` kernel call advancing the whole
+    block in VMEM."""
+    if not use_kernel:
+        (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
+         cool), acc = advance_plant(
+            cfg, state.ready, state.pipeline, state.pipe_sum, state.queue,
+            state.wait_sum, state.util_ema, state.lim.cooldown, acc,
+            arrivals, n_ticks)
+        state = state._replace(
+            ready=ready, pipeline=pipeline, pipe_sum=pipe_sum,
+            queue=queue, wait_sum=wait_sum, util_ema=util_ema,
+            lim=LimiterState(cooldown=cool, last_dir=state.lim.last_dir))
+        return state, acc
+
+    from repro.kernels import ops
+    (r, p, q, w, u, c, ps), ticks = ops.plant_tick_block(
+        state.ready[None], state.pipeline[None], state.queue[None],
+        state.wait_sum[None], state.util_ema[None],
+        state.lim.cooldown[None], state.pipe_sum[None],
+        jnp.asarray(arrivals)[None],
+        n_ticks=n_ticks, rps_per_replica=cfg.rps_per_replica,
+        service_sec=cfg.service_sec, slo_sec=cfg.slo_sec,
+        resp_cap_sec=cfg.resp_cap_sec, metric_tau_sec=cfg.metric_tau_sec)
+    state = state._replace(
+        ready=r[0], pipeline=p[0], queue=q[0], wait_sum=w[0],
+        util_ema=u[0], pipe_sum=ps[0],
+        lim=LimiterState(cooldown=c[0], last_dir=state.lim.last_dir))
+    served, violated, cold, total, resp, util, ready = (
+        t[0] for t in ticks)                          # [n_ticks] each
+    acc = (acc[0] + jnp.sum(served), acc[1] + jnp.sum(violated),
+           acc[2] + jnp.sum(cold), acc[3] + jnp.sum(total),
+           acc[4] + jnp.sum(resp * served),
+           jnp.maximum(acc[5], jnp.max(resp)), acc[6], acc[7], acc[8],
+           acc[9] + jnp.sum(util), acc[10] + jnp.sum(ready))
+    return state, acc
+
+
+def _block(cfg: SimConfig, controller: Controller, state: SimState, acc,
+           arrivals, minute_idx, n_ticks: int, use_kernel: bool):
+    """One control period: decide at the head tick, then `n_ticks - 1`
+    plant-only ticks, all folded into the minute accumulator."""
+    state, head = _ctrl_tick(cfg, controller, state, arrivals, minute_idx,
+                             True)
+    acc = _acc_fold(acc, head)
+    if n_ticks == 1:
+        return state, acc
+    return _plant_block(cfg, state, acc, arrivals, n_ticks - 1, use_kernel)
+
+
+def _minute_blocked(cfg: SimConfig, controller: Controller, carry,
+                    rate_this_min: jax.Array, use_kernel: bool = False):
+    """One minute = ceil(60/ci) control-period blocks + the minute-
+    boundary controller hook. `decide` runs exactly once per block."""
     state, minute_idx = carry
     arrivals_per_sec = rate_this_min / 60.0
+    ci = max(min(int(cfg.control_interval_sec), 60), 1)
+    n_full = 60 // ci                  # full-length blocks
+    tail = 60 - n_full * ci            # remainder block (0 if ci | 60)
 
-    def tick_body(st, sec):
-        return _tick(cfg, controller, st, arrivals_per_sec, sec, minute_idx)
+    acc = _acc_init()
 
-    state, outs = jax.lax.scan(tick_body, state,
-                               jnp.arange(60, dtype=jnp.int32))
-    (served, violated, cold, total_reps, resp, util, ups, downs, osc,
-     ready) = outs
+    def block_body(carry, _):
+        st, a = carry
+        return _block(cfg, controller, st, a, arrivals_per_sec,
+                      minute_idx, ci, use_kernel), None
 
-    m = MinuteOut(
-        served=jnp.sum(served), violated=jnp.sum(violated),
-        cold_starts=jnp.sum(cold), replica_seconds=jnp.sum(total_reps),
-        queue_end=state.queue, resp_sum=jnp.sum(resp * served),
-        resp_max=jnp.max(resp), ups=jnp.sum(ups), downs=jnp.sum(downs),
-        oscillations=jnp.sum(osc), util_mean=jnp.mean(util),
-        ready_mean=jnp.mean(ready))
+    if n_full == 1:      # a length-1 scan only obscures the block body
+        state, acc = _block(cfg, controller, state, acc, arrivals_per_sec,
+                            minute_idx, ci, use_kernel)
+    elif n_full:
+        (state, acc), _ = jax.lax.scan(block_body, (state, acc), None,
+                                       length=n_full)
+    if tail:
+        state, acc = _block(cfg, controller, state, acc, arrivals_per_sec,
+                            minute_idx, tail, use_kernel)
+    return _finish_minute(cfg, controller, state, minute_idx,
+                          rate_this_min, acc)
+
+
+def _finish_minute(cfg, controller, state, minute_idx, rate_this_min, acc):
+    """Turn the tick-folded accumulator into MinuteOut and run the minute
+    hook — shared verbatim by the blocked and reference paths so their
+    aggregates stay bitwise identical."""
+    m = _minute_out(acc, state)
 
     # minute boundary: push this minute's arrivals into history, run hook
     hist = jnp.concatenate(
@@ -178,6 +481,28 @@ def _minute(cfg: SimConfig, controller: Controller, carry,
     return (state, minute_idx + 1), m
 
 
+# ----------------------------------------------------- reference path ----
+def _minute_reference(cfg: SimConfig, controller: Controller, carry,
+                      rate_this_min: jax.Array):
+    """One minute = 60 ticks (decide evaluated on EVERY tick and masked
+    by `do_ctrl` — the historical semantics the blocked scan is pinned
+    bit-exact against) + the minute hook."""
+    state, minute_idx = carry
+    arrivals_per_sec = rate_this_min / 60.0
+
+    def tick_body(carry, sec):
+        st, a = carry
+        do_ctrl = (sec % cfg.control_interval_sec) == 0
+        st, out = _ctrl_tick(cfg, controller, st, arrivals_per_sec,
+                             minute_idx, do_ctrl)
+        return (st, _acc_fold(a, out)), None
+
+    (state, acc), _ = jax.lax.scan(tick_body, (state, _acc_init()),
+                                   jnp.arange(60, dtype=jnp.int32))
+    return _finish_minute(cfg, controller, state, minute_idx,
+                          rate_this_min, acc)
+
+
 def initial_state(controller: Controller,
                   cfg: SimConfig = SimConfig()) -> SimState:
     """The t=0 plant state every simulation path starts from (the scan in
@@ -185,6 +510,7 @@ def initial_state(controller: Controller,
     return SimState(
         ready=jnp.float32(cfg.initial_replicas),
         pipeline=jnp.zeros((cfg.startup_sec,), jnp.float32),
+        pipe_sum=jnp.float32(0.0),
         queue=jnp.float32(0.0),
         wait_sum=jnp.float32(0.0),
         util_ema=jnp.float32(0.5),
@@ -193,23 +519,56 @@ def initial_state(controller: Controller,
         ctrl_state=controller.init())
 
 
+def _use_plant_kernel(explicit: bool | None) -> bool:
+    """Dual dispatch shared with `window_features` / `holt_winters`: the
+    fused Pallas block kernel on TPU, the blocked path (its oracle)
+    elsewhere."""
+    if explicit is None:
+        return jax.default_backend() == "tpu"
+    return explicit
+
+
 #: Public minute-granularity step: carry=(SimState, minute_idx) -> per-
 #: minute MinuteOut scalars. `repro.evals.metrics` scans this directly to
-#: accumulate metrics in-carry without materializing [M] outputs.
-minute_step = _minute
+#: accumulate metrics in-carry without materializing [M] outputs. This is
+#: the control-period-blocked fast path; `minute_step_reference` keeps
+#: the historical decide-every-tick semantics for parity pins.
+minute_step = _minute_blocked
+minute_step_reference = _minute_reference
 
 
 def simulate(rates_per_min: jax.Array, controller: Controller,
-             cfg: SimConfig = SimConfig()) -> MinuteOut:
-    """Simulate one workload. rates_per_min [M] -> MinuteOut of [M] arrays."""
+             cfg: SimConfig = SimConfig(), *,
+             plant_kernel: bool | None = None) -> MinuteOut:
+    """Simulate one workload. rates_per_min [M] -> MinuteOut of [M] arrays.
+
+    Control-period-blocked: `decide` runs once per control interval
+    (bit-exact with `simulate_reference`, which evaluates it every tick).
+    `plant_kernel=None` auto-selects the fused Pallas plant kernel on TPU.
+    """
+    use_kernel = _use_plant_kernel(plant_kernel)
     (state, _), out = jax.lax.scan(
-        partial(_minute, cfg, controller),
+        partial(_minute_blocked, cfg, controller, use_kernel=use_kernel),
         (initial_state(controller, cfg), jnp.int32(0)),
         rates_per_min.astype(jnp.float32))
     return out
 
 
-def make_simulator(controller: Controller, cfg: SimConfig = SimConfig()):
+def simulate_reference(rates_per_min: jax.Array, controller: Controller,
+                       cfg: SimConfig = SimConfig()) -> MinuteOut:
+    """The retained seed-semantics scan (decide evaluated on all 60 ticks
+    per minute, masked off-interval). Slow; exists as the parity oracle
+    for `simulate` and the blocked-vs-seed benchmark baseline."""
+    (state, _), out = jax.lax.scan(
+        partial(_minute_reference, cfg, controller),
+        (initial_state(controller, cfg), jnp.int32(0)),
+        rates_per_min.astype(jnp.float32))
+    return out
+
+
+def make_simulator(controller: Controller, cfg: SimConfig = SimConfig(), *,
+                   plant_kernel: bool | None = None):
     """jit(vmap(simulate)): rates [W, M] -> MinuteOut of [W, M] arrays."""
-    fn = jax.vmap(lambda r: simulate(r, controller, cfg))
+    fn = jax.vmap(lambda r: simulate(r, controller, cfg,
+                                     plant_kernel=plant_kernel))
     return jax.jit(fn)

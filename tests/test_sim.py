@@ -25,7 +25,9 @@ def test_conservation_served_never_exceeds_arrivals():
     out = _run(rates)
     total_arrived = rates.sum()
     served = out.served.sum()
-    assert served <= total_arrived + 1e-3
+    # f32 slack: at ~1e5 total requests one ulp is ~8e-3, so an absolute
+    # 1e-3 bound is below the rounding of the served accumulation itself
+    assert served <= total_arrived * (1 + 1e-6) + 1e-3
     # whatever wasn't served must still be queued
     assert served + out.queue_end[-1] == pytest.approx(total_arrived,
                                                        rel=1e-5)
