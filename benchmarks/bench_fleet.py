@@ -1,0 +1,81 @@
+"""Fleet-scale evaluation throughput: the W decade sweep behind
+BENCH_fleet.json (the ROADMAP's 10^5-10^6 lane target).
+
+One record per fleet size W in {64, 1e2, 1e3, 1e4, 1e5} (smoke: a
+seconds-scale prefix), each a single-dispatch `repro.evals.fleet` run of
+the HPA policy over burst_storm workloads: simulated workload-minutes
+per wall-second, dispatch count, and peak host RSS. The acceptance bar
+the sweep pins (tests/test_bench_fleet.py): W=1e5 completes in ONE
+dispatch and its peak RSS stays under 2x the W=1e4 run — the in-scan
+pooled accumulators are O(bins), so only the rates tensor grows with W.
+
+A final `fleet_stream` record runs the largest decade through the
+donated-accumulator streaming fold (the 1e6-lane mode's mechanics) to
+keep its per-chunk overhead measured.
+
+`python -m benchmarks.run fleet --json .` writes BENCH_fleet.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro.evals import fleet
+
+POLICIES = ("hpa",)
+MINUTES = 60
+W_CHUNK = 1000          # live lanes per chunk at fleet scale
+DECADES = (64, 100, 1_000, 10_000, 100_000)
+SMOKE_DECADES = (64, 100, 1_000)
+
+
+def _spec(W: int) -> fleet.FleetSpec:
+    return fleet.spec(f"bench_w{W}", policies=POLICIES,
+                      scenario="burst_storm", n_workloads=W,
+                      w_chunk=min(W, W_CHUNK), minutes=MINUTES, seed=0)
+
+
+def main(smoke: bool = False):
+    decades = SMOKE_DECADES if smoke else DECADES
+    payload = {"policies": list(POLICIES), "minutes": MINUTES,
+               "w_chunk": W_CHUNK, "n_devices": jax.device_count(),
+               "per_w": {}}
+    last = None
+    for W in decades:          # increasing W so peak RSS is attributable
+        res = fleet.run_fleet(_spec(W), warmup=True)
+        payload["per_w"][W] = {
+            "minutes_per_sec": res.meta["minutes_per_sec"],
+            "lane_minutes_per_sec": res.meta["lane_minutes_per_sec"],
+            "wall_s": res.meta["wall_s"],
+            "dispatches": res.meta["dispatches"],
+            "peak_rss_mb": res.meta["peak_rss_mb"],
+            "rei_hpa": float(res.rei.rei[0])}
+        last = res
+    top = max(payload["per_w"])
+    if 10_000 in payload["per_w"] and 100_000 in payload["per_w"]:
+        payload["rss_ratio_1e5_vs_1e4"] = (
+            payload["per_w"][100_000]["peak_rss_mb"]
+            / payload["per_w"][10_000]["peak_rss_mb"])
+
+    # streaming fold on the largest decade: the 1e6-lane mode's mechanics
+    t0 = time.time()
+    res_s = fleet.run_fleet(_spec(top), stream=True)
+    payload["stream"] = {
+        "workloads": top, "wall_s": res_s.meta["wall_s"],
+        "minutes_per_sec": res_s.meta["minutes_per_sec"],
+        "dispatches": res_s.meta["dispatches"],
+        "peak_rss_mb": res_s.meta["peak_rss_mb"],
+        "total_s": time.time() - t0}
+
+    mps = payload["per_w"][top]["minutes_per_sec"]
+    common.emit("fleet_decades", 1e6 / mps,
+                f"w{top}_mps={mps:,.0f}", payload)
+    smps = payload["stream"]["minutes_per_sec"]
+    common.emit("fleet_stream", 1e6 / smps, f"w{top}_mps={smps:,.0f}")
+    del last
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,15 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 #
-#   python -m benchmarks.run [bench] [--smoke] [--json DIR]
+#   python -m benchmarks.run [bench] [--smoke] [--json DIR] [--profile DIR]
 #
 # --json DIR writes each bench's emitted records to DIR/BENCH_<bench>.json
 # (stable schema, sorted keys) so perf numbers diff across PRs; --smoke
-# asks benches that support it (bench_sim) for a seconds-scale variant —
-# the CI tier-1 smoke uploads BENCH_sim.json as a workflow artifact.
+# asks benches that support it (bench_sim, bench_fleet) for a
+# seconds-scale variant — the CI tier-1 smoke uploads BENCH_sim.json and
+# BENCH_fleet.json as workflow artifacts. --profile DIR wraps each bench
+# in jax.profiler.trace (one trace subdir per bench, viewable in
+# TensorBoard/Perfetto) so a fleet-scale regression is attributed to a
+# dispatch, not guessed at.
 from __future__ import annotations
 
 import inspect
@@ -33,12 +37,14 @@ def _write_json(out_dir: pathlib.Path, bench: str, records: list,
 
 def main() -> None:
     from benchmarks import (bench_aapaset, bench_autoscaling,
-                            bench_classification, bench_labeling,
-                            bench_latency, bench_pipeline_perf, bench_rei,
+                            bench_classification, bench_fleet,
+                            bench_labeling, bench_latency,
+                            bench_pipeline_perf, bench_rei,
                             bench_roofline, bench_sim, bench_uncertainty)
     from benchmarks import common
     benches = [
         ("sim", bench_sim),
+        ("fleet", bench_fleet),
         ("aapaset", bench_aapaset),
         ("labeling", bench_labeling),
         ("classification", bench_classification),
@@ -58,6 +64,13 @@ def main() -> None:
             sys.exit("--json needs a directory argument")
         json_dir = pathlib.Path(argv[i + 1])
         del argv[i:i + 2]
+    profile_dir: pathlib.Path | None = None
+    if "--profile" in argv:
+        i = argv.index("--profile")
+        if i + 1 >= len(argv):
+            sys.exit("--profile needs a directory argument")
+        profile_dir = pathlib.Path(argv[i + 1])
+        del argv[i:i + 2]
     argv = [a for a in argv if a != "--smoke"]
     only = argv[0] if argv else None
 
@@ -72,6 +85,13 @@ def main() -> None:
         t0 = time.time()
         failed = False
         common.start_capture()
+        trace = None
+        if profile_dir is not None:
+            import contextlib
+            import jax
+            trace = contextlib.ExitStack()
+            trace.enter_context(
+                jax.profiler.trace(str(profile_dir / name)))
         try:
             mod.main(**kwargs)
         except Exception:
@@ -79,6 +99,11 @@ def main() -> None:
             failed = True
             traceback.print_exc()
             print(f"{name},0.0,FAILED")
+        finally:
+            if trace is not None:
+                trace.close()
+                print(f"# [{name}] profile -> {profile_dir / name}",
+                      flush=True)
         records = common.drain_capture()
         if json_dir is not None:
             # a bench without a smoke variant ran its full workload even

@@ -94,3 +94,33 @@ class AAPAsetLoader:
         """[F, T] counts of the kept functions, for forecast backtests."""
         s = self.data.series
         return s if max_functions is None else s[:max_functions]
+
+    def rate_chunks(self, n_workloads: int, w_chunk: int, *,
+                    minutes: int | None = None, seed: int = 0,
+                    shard_index: int = 0,
+                    num_shards: int = 1) -> Iterator[np.ndarray]:
+        """Deterministic fleet feed: [w_chunk, minutes] trace chunks for
+        ``repro.evals.fleet`` streaming runs, sampled (with replacement
+        past F) from the kept functions' count series.
+
+        Chunk c is drawn with rng seeded on (seed, c), so any chunk can
+        be regenerated independently of the others, and a fleet larger
+        than the artifact never materializes [W, T] on one host — each
+        shard generates only the chunks where ``c % num_shards ==
+        shard_index`` (disjoint, jointly exhaustive), the way a
+        multi-host launcher would split the fleet."""
+        if n_workloads % w_chunk:
+            raise ValueError(f"w_chunk {w_chunk} must divide "
+                             f"n_workloads {n_workloads}")
+        if not 0 <= shard_index < num_shards:
+            raise ValueError(f"shard_index {shard_index} out of range "
+                             f"for num_shards {num_shards}")
+        s = self.data.series
+        T = s.shape[1] if minutes is None else min(int(minutes), s.shape[1])
+        for c in range(n_workloads // w_chunk):
+            if c % num_shards != shard_index:
+                continue
+            rng = np.random.default_rng(
+                np.random.SeedSequence([seed, c]))
+            take = rng.integers(0, s.shape[0], size=w_chunk)
+            yield np.ascontiguousarray(s[take, :T]).astype(np.float32)

@@ -17,16 +17,23 @@ tests and CPU smoke runs import the same model code unchanged.
 
 Any axis that does not evenly divide a dimension is dropped from that
 dimension's spec (replicated) rather than erroring — smoke configs have
-tiny dims that rarely divide a production axis.
+tiny dims that rarely divide a production axis. Each such drop is logged
+ONCE per (logical, size, dim) so a fleet run cannot silently lose its
+sharding; pass ``strict=True`` to `spec` to raise instead (the fleet
+evaluation plane does, via ``lane_sharding(..., strict=True)``).
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from typing import Any, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_LOG = logging.getLogger(__name__)
+_WARNED: set[tuple] = set()      # (logical, axis_size, dim) already logged
 
 _DATA_AXES = ("pod", "data")   # outer-to-inner data-parallel axes
 _MODEL_AXIS = "model"
@@ -64,14 +71,33 @@ class MeshRules:
             return self.mesh.shape[self.mp] if self.mp else 1
         return self.mesh.shape.get(logical, 1)
 
-    def spec(self, logicals, shape) -> P:
-        """Build a PartitionSpec, dropping axes that don't divide dims."""
+    def spec(self, logicals, shape, *, strict: bool = False) -> P:
+        """Build a PartitionSpec, dropping axes that don't divide dims.
+
+        A requested axis that doesn't evenly divide its dimension is
+        replicated (and logged once per (logical, size, dim) triple);
+        with ``strict=True`` it raises instead, so fleet-scale runs
+        can't silently lose their sharding."""
         entries = []
         for i, dim in enumerate(shape):
             logical = logicals[i] if i < len(logicals) else None
             size = self.axis_size(logical)
             phys = self.resolve(logical)
-            if phys is None or size <= 1 or dim % size != 0:
+            if phys is None or size <= 1:
+                entries.append(None)
+            elif dim % size != 0:
+                if strict:
+                    raise ValueError(
+                        f"axis {logical!r} (size {size}) does not divide "
+                        f"dim {i} of shape {tuple(shape)}; pad the dim or "
+                        f"drop strict= to replicate")
+                key = (logical, size, dim)
+                if key not in _WARNED:
+                    _WARNED.add(key)
+                    _LOG.warning(
+                        "sharding axis %r (size %d) does not divide dim %d"
+                        " — replicating (logged once per shape)",
+                        logical, size, dim)
                 entries.append(None)
             else:
                 entries.append(phys)
@@ -106,6 +132,23 @@ def constrain(x: jax.Array, logicals) -> jax.Array:
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, rules.spec(logicals, x.shape)))
+
+
+def lane_sharding(shape, *, w_axis: int = 1,
+                  strict: bool = False) -> NamedSharding | None:
+    """NamedSharding for the simulator's fused lane arrays: the workload
+    axis (`w_axis`, default 1 for [P, W, ...] batches; pass 0 for a bare
+    [W] / [W, M] tensor, 2 for the matrix runner's [S, Z, W, M]) shards
+    over "dp", everything else replicates. Returns None with no active
+    mesh so callers can skip the device_put."""
+    rules = _ACTIVE
+    if rules is None:
+        return None
+    w_axis = w_axis % max(len(shape), 1)
+    logicals = tuple("dp" if i == w_axis else None
+                     for i in range(len(shape)))
+    return NamedSharding(rules.mesh,
+                         rules.spec(logicals, shape, strict=strict))
 
 
 # ------------------------------------------------------- tree shardings ----

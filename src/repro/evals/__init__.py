@@ -9,11 +9,14 @@ subsystem (paper §IV.D/§V), instead of per-benchmark aggregation loops.
                   baselines (episode length x workload count).
 * ``matrix``    — policies x forecasters x scenarios x seeds in one
                   compiled call; ``run(spec)`` is the front door.
+* ``fleet``     — 10^5-10^6 workload lanes: W-chunked episodes with the
+                  workload axis pooled in-scan (O(bins) accumulators),
+                  one sharded dispatch or a streaming donated fold.
 * ``artifacts`` — content-addressed result cards (same hashing scheme as
                   ``aapaset.manifest``) + paper-table renderers
                   (Table IV policy comparison, Fig 2 per-archetype
                   breakdown, §V.D REI sensitivity).
 """
-from repro.evals import artifacts, matrix, metrics, rei  # noqa: F401
+from repro.evals import artifacts, fleet, matrix, metrics, rei  # noqa: F401,E501
 from repro.evals.matrix import (EvalResult, MatrixRun,   # noqa: F401
                                 MatrixSpec, run, smoke_spec, spec)

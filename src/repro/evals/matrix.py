@@ -32,6 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.dist import sharding as shd
 from repro.evals import metrics as EM
 from repro.evals import rei as ER
 from repro.scaling import batch, registry, scenarios
@@ -151,74 +152,117 @@ def build_rates(spec_: MatrixSpec) -> np.ndarray:
     return rates
 
 
-def _lane_runner(ctrls, cfg, edges):
-    """rates [W, M] -> MetricAccums of [L, W, ...] leaves: ONE blocked
-    scan advances all L x W fused plant lanes with exactly one `decide`
+def _lane_runner(ctrls, cfg, edges, *, per_workload: bool = True,
+                 shard: bool = True):
+    """rates [W, M] -> MetricAccums of [P, W, ...] leaves: ONE blocked
+    scan advances all P x W fused plant lanes with exactly one `decide`
     per controller per control step (`scaling.batch.make_batch_minute_
     step`), folding each minute into per-lane MetricAccums in the scan
-    carry — the shared core of the matrix runner and the ad-hoc
-    controller evaluator. Memory stays O(bins) per lane."""
+    carry — the shared core of the matrix runner, the ad-hoc controller
+    evaluator, and the fleet runner. Memory stays O(bins) per lane.
+
+    With ``per_workload=False`` the workload axis reduces *inside* the
+    scan (`EM.accum_update_pooled`) and the leaves are [P, ...]: the
+    carry is O(P * bins) however large W grows — the fleet-scale mode.
+    Under an active mesh the lane state and the per-workload accums are
+    constrained over "dp"; the pooled accums are tiny and replicate (the
+    cross-shard reduction happens in the scatter/sum ops themselves)."""
     n_lanes = len(ctrls)
-    step = batch.make_batch_minute_step(ctrls, cfg)
-    fold = jax.vmap(lambda a, m: EM.accum_update(a, m, edges))
+    step = batch.make_batch_minute_step(ctrls, cfg, shard=shard)
+    if per_workload:
+        fold = jax.vmap(jax.vmap(lambda a, m: EM.accum_update(a, m,
+                                                              edges)))
+    else:
+        fold = lambda a, m: EM.accum_update_pooled(a, m, edges)  # noqa: E731
 
     def lanes(rates_w):
         W, _ = rates_w.shape
+        lead = (n_lanes, W) if per_workload else (n_lanes,)
         acc0 = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (n_lanes * W,) + a.shape),
+            lambda a: jnp.broadcast_to(a, lead + a.shape),
             EM.accum_init(edges.shape[0]))
 
         def body(carry, rate_w):
             st, idx, acc = carry
             st, m = step(st, idx, rate_w)
-            return (st, idx + 1, fold(acc, m)), None
+            acc = fold(acc, m)
+            if shard and per_workload:
+                acc = jax.tree.map(
+                    lambda a: shd.constrain(a, (None, "dp")), acc)
+            return (st, idx + 1, acc), None
 
         (_, _, acc), _ = jax.lax.scan(
             body,
             (batch.batch_initial_state(ctrls, W, cfg), jnp.int32(0), acc0),
             rates_w.T)
-        return jax.tree.map(
-            lambda a: a.reshape((n_lanes, W) + a.shape[1:]), acc)
+        return acc
     return lanes
 
 
-def make_runner(spec_: MatrixSpec, classify=None):
+def make_runner(spec_: MatrixSpec, classify=None, *,
+                per_workload: bool = True, shard: bool = True,
+                donate: bool = False):
     """jit: rates [S, Z, W, M] -> (pooled EpisodeMetrics [S, Z, F, P],
     per-workload EpisodeMetrics [S, Z, F, P, W]). One compile, one
-    dispatch for the whole matrix."""
+    dispatch for the whole matrix. Under an active `repro.dist.sharding`
+    mesh the workload axis shards over "dp" (constrained on the input
+    tensor and on every lane carry inside the scan).
+
+    ``per_workload=False`` streams the workload reduction inside the
+    scan (accum memory O(bins) per cell, independent of W) and returns
+    ``(pooled, None)`` — the fleet-scale mode. ``donate=True`` donates
+    the rates buffer to the call (fleet-sized inputs are not needed
+    again after dispatch)."""
     cfg = spec_.sim_config()
     ctrls = controllers(spec_, classify)
     edges = EM.response_edges(spec_.bins, cfg.resp_cap_sec)
     _, _, f_axis, p_axis = spec_.shape
 
-    over_seeds = jax.vmap(_lane_runner(ctrls, cfg, edges))
-    over_scenarios = jax.vmap(over_seeds)        # [S, Z, L, W, ...]
+    over_seeds = jax.vmap(_lane_runner(ctrls, cfg, edges,
+                                       per_workload=per_workload,
+                                       shard=shard))
+    over_scenarios = jax.vmap(over_seeds)        # [S, Z, L(, W), ...]
 
     def run_fn(rates):
-        accs = over_scenarios(jnp.asarray(rates, jnp.float32))
+        rates = jnp.asarray(rates, jnp.float32)
+        if shard:
+            rates = shd.constrain(rates, (None, None, "dp", None))
+        accs = over_scenarios(rates)
         accs = jax.tree.map(
             lambda a: a.reshape(a.shape[:2] + (f_axis, p_axis)
                                 + a.shape[3:]), accs)
+        if not per_workload:
+            return EM.finalize(accs, edges), None
         per_w = EM.finalize(accs, edges)
         pool = EM.finalize(jax.tree.map(lambda a: a.sum(4), accs), edges)
         return pool, per_w
 
-    return jax.jit(run_fn)
+    return jax.jit(run_fn, donate_argnums=(0,) if donate else ())
 
 
 def make_controller_evaluator(ctrls: Sequence,
                               cfg: SimConfig = SimConfig(), *,
-                              bins: int = EM.DEFAULT_BINS):
+                              bins: int = EM.DEFAULT_BINS,
+                              per_workload: bool = True,
+                              shard: bool = True):
     """Reusable jitted single-scenario evaluator for ad-hoc controllers
     (ablation variants, custom bands): rates [W, M] -> (pooled
     EpisodeMetrics [P], per-workload [P, W]). Keep the returned fn when
-    sweeping many rate tensors — each call reuses the one compile."""
+    sweeping many rate tensors — each call reuses the one compile.
+
+    ``per_workload=False`` never materializes the [P, W, bins] accum
+    tensor — the W reduction streams inside the scan and the result is
+    ``(pooled [P], None)``. Use it for fleet-sized W (the host-parity
+    tests at W >= 1e4 do)."""
     ctrls = list(ctrls)
     edges = EM.response_edges(bins, cfg.resp_cap_sec)
-    lanes = _lane_runner(ctrls, cfg, edges)
+    lanes = _lane_runner(ctrls, cfg, edges, per_workload=per_workload,
+                         shard=shard)
 
     def run_fn(rates_w):
         accs = lanes(rates_w)
+        if not per_workload:
+            return EM.finalize(accs, edges), None
         return (EM.finalize(jax.tree.map(lambda a: a.sum(1), accs), edges),
                 EM.finalize(accs, edges))
 
@@ -227,9 +271,11 @@ def make_controller_evaluator(ctrls: Sequence,
 
 def evaluate_controllers(ctrls: Sequence, rates,
                          cfg: SimConfig = SimConfig(), *,
-                         bins: int = EM.DEFAULT_BINS):
+                         bins: int = EM.DEFAULT_BINS,
+                         per_workload: bool = True):
     """One-shot convenience wrapper over `make_controller_evaluator`."""
-    return make_controller_evaluator(ctrls, cfg, bins=bins)(
+    return make_controller_evaluator(ctrls, cfg, bins=bins,
+                                     per_workload=per_workload)(
         jnp.asarray(rates, jnp.float32))
 
 

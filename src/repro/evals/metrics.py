@@ -130,6 +130,41 @@ def accum_update(acc: MetricAccum, m: MinuteOut,
         hist=acc.hist.at[_bin_index(resp_mean, edges)].add(m.served))
 
 
+def accum_update_pooled(acc: MetricAccum, m: MinuteOut,
+                        edges: jax.Array) -> MetricAccum:
+    """Fold one minute of [..., W] plant output into a *pooled* [...]
+    accumulator: the workload axis reduces inside the scan, so the carry
+    is O(bins) per controller lane however large W grows — the streaming
+    reduction the fleet runner (``repro.evals.fleet``) relies on.
+
+    Equivalent to per-workload `accum_update` followed by a tree-sum
+    over W, up to f32 summation order (the adds happen per minute here,
+    per workload there)."""
+    resp_mean = jnp.where(m.served > 0,
+                          m.resp_sum / jnp.maximum(m.served, EPS), 0.0)
+    idx = _bin_index(resp_mean, edges)                     # [..., W]
+    lead = idx.shape[:-1]
+    hist = (acc.hist.reshape(-1, acc.hist.shape[-1])
+            .at[jnp.arange(math.prod(lead) if lead else 1)[:, None],
+                idx.reshape(-1, idx.shape[-1])]
+            .add(m.served.reshape(-1, idx.shape[-1]))
+            .reshape(acc.hist.shape))
+    return MetricAccum(
+        served=acc.served + m.served.sum(-1),
+        violated=acc.violated + m.violated.sum(-1),
+        cold=acc.cold + m.cold_starts.sum(-1),
+        replica_sec=acc.replica_sec + m.replica_seconds.sum(-1),
+        resp_sum=acc.resp_sum + m.resp_sum.sum(-1),
+        util_sum=acc.util_sum + m.util_mean.sum(-1),
+        over_cnt=acc.over_cnt
+        + (m.util_mean < 0.5).astype(jnp.float32).sum(-1),
+        ups=acc.ups + m.ups.sum(-1),
+        downs=acc.downs + m.downs.sum(-1),
+        osc=acc.osc + m.oscillations.sum(-1),
+        minutes=acc.minutes + float(idx.shape[-1]),
+        hist=hist)
+
+
 def _hist_quantile(hist: jax.Array, rep: jax.Array, q: float) -> jax.Array:
     """hist [..., bins] -> smallest-bin representative where the weighted
     CDF reaches q (inverted CDF, matching the host oracle)."""

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -65,6 +66,28 @@ def make_batch_backtest(forecasters: Sequence[Forecaster | str]):
 
 
 def batch_smooth(forecasters: Sequence[Forecaster | str],
-                 y: jax.Array) -> jax.Array:
-    """Convenience wrapper: y [B, T] -> predictions [F, B, T]."""
-    return make_batch_backtest(forecasters)(y)
+                 y: jax.Array, *, b_chunk: int | None = None) -> jax.Array:
+    """Convenience wrapper: y [B, T] -> predictions [F, B, T].
+
+    `b_chunk` runs the backtest `b_chunk` series at a time (one compile,
+    reused per chunk; the tail chunk is zero-padded to the chunk shape
+    and trimmed) so fleet-sized B never materializes an [F, B, T] device
+    intermediate — each series' lane is independent, so the chunked
+    predictions are bit-identical to the unchunked ones."""
+    B = int(np.shape(y)[0])
+    if b_chunk is None or b_chunk >= B:
+        return make_batch_backtest(forecasters)(y)
+    if b_chunk <= 0:
+        raise ValueError(f"b_chunk must be positive, got {b_chunk}")
+    fn = make_batch_backtest(forecasters)
+    y = np.asarray(y, np.float32)
+    outs = []
+    for lo in range(0, B, b_chunk):
+        chunk = y[lo:lo + b_chunk]
+        n = chunk.shape[0]
+        if n < b_chunk:          # pad the tail so the compile is reused
+            chunk = np.concatenate(
+                [chunk, np.zeros((b_chunk - n,) + chunk.shape[1:],
+                                 np.float32)])
+        outs.append(np.asarray(fn(chunk))[:, :n])
+    return jnp.concatenate([jnp.asarray(o) for o in outs], axis=1)

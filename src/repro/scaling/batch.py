@@ -7,8 +7,8 @@ compiled call:
 
 * `make_batch_simulator(controllers, cfg)` — arbitrary (heterogeneous)
   controllers. ONE control-period-blocked scan advances all P x W plant
-  lanes as fused vectors, and at each block head every controller runs
-  its `decide` exactly once on its own W-slice of the lanes: one
+  lanes as fused [P, W] vectors, and at each block head every controller
+  runs its `decide` exactly once on its own [W] row of the lanes: one
   compile, one dispatch, exactly P (not P^2) decide evaluations per
   control step, with the plant dynamics amortized across the whole
   P x W batch. This replaced a design that carried every controller's
@@ -18,6 +18,17 @@ compiled call:
   `simulate(rates[w], controllers[p])` (pinned to tolerance by
   tests/test_scaling.py — compiled embeddings differ, so last-ulp
   equality is not guaranteed, see tests/test_sim_blocked.py).
+
+  The W axis is the fleet axis: every lane field keeps W as its second
+  dimension and is constrained over the ``repro.dist.sharding`` "dp"
+  axis each minute, so activating a mesh (`shd.set_mesh`) shards the
+  whole episode scan across devices with no code change — each device
+  advances its W-shard of every policy's lanes and only the episode-end
+  reductions communicate. With no active mesh the constraints are
+  no-ops. `w_chunk=` additionally scans over W-chunks of the workload
+  axis inside one dispatch so the live plant state is [P, w_chunk]
+  regardless of W (the fleet-scale front door over this is
+  ``repro.evals.fleet``).
 
 * `make_grid_simulator(name, grid, cfg)` — same-structured controllers
   (one registry family, hyperparameters declared `stackable`). The
@@ -34,6 +45,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.dist import sharding as shd
 from repro.scaling import registry
 from repro.scaling.api import (Controller, LimiterState, Obs,
                                apply_decision)
@@ -44,59 +56,74 @@ from repro.sim.cluster import (MinuteOut, SimConfig, advance_plant,
 
 
 class BatchState(NamedTuple):
-    """Plant state for P x W fused lanes (lane l = p * W + w) plus the
-    per-controller control states (leaves lead with [W])."""
-    ready: jax.Array         # [L]
-    pipeline: jax.Array      # [L, startup_sec]
-    pipe_sum: jax.Array      # [L]
-    queue: jax.Array         # [L]
-    wait_sum: jax.Array      # [L]
-    util_ema: jax.Array      # [L]
-    cooldown: jax.Array      # [L]
-    last_dir: jax.Array      # [L]
+    """Plant state for P x W fused lanes plus the per-controller control
+    states (leaves lead with [W]). W is the fleet/sharding axis: every
+    lane field keeps it second so `constrain_lanes` can pin it to the
+    "dp" mesh axis."""
+    ready: jax.Array         # [P, W]
+    pipeline: jax.Array      # [P, W, startup_sec]
+    pipe_sum: jax.Array      # [P, W]
+    queue: jax.Array         # [P, W]
+    wait_sum: jax.Array      # [P, W]
+    util_ema: jax.Array      # [P, W]
+    cooldown: jax.Array      # [P, W]
+    last_dir: jax.Array      # [P, W]
     rate_history: jax.Array  # [W, history_len] (shared across policies)
     ctrl: tuple              # per-controller state pytrees, leaves [W, ...]
 
 
 def batch_initial_state(ctrls, W: int, cfg: SimConfig) -> BatchState:
-    L = len(ctrls) * W
+    P = len(ctrls)
     st = initial_state(ctrls[0], cfg)
 
     def rep(x):
-        return jnp.broadcast_to(x, (L,) + jnp.shape(x))
+        return jnp.broadcast_to(x, (P, W) + jnp.shape(x))
 
     return BatchState(
         ready=rep(st.ready), pipeline=rep(st.pipeline),
         pipe_sum=rep(st.pipe_sum), queue=rep(st.queue),
         wait_sum=rep(st.wait_sum), util_ema=rep(st.util_ema),
-        cooldown=jnp.zeros((L,), jnp.float32),
-        last_dir=jnp.zeros((L,), jnp.float32),
+        cooldown=jnp.zeros((P, W), jnp.float32),
+        last_dir=jnp.zeros((P, W), jnp.float32),
         rate_history=jnp.zeros((W, cfg.history_len), jnp.float32),
         ctrl=tuple(jax.vmap(lambda _, c=c: c.init())(jnp.arange(W))
                    for c in ctrls))
 
 
-def _batch_ctrl_tick(cfg, ctrls, W, state: BatchState, acc, arr_w,
+def constrain_lanes(state: BatchState) -> BatchState:
+    """Constrain every lane field's workload axis over the "dp" mesh
+    axis (no-op without an active mesh): [P, W, ...] fields shard dim 1,
+    rate_history and the per-controller [W, ...] states shard dim 0."""
+    lanes = {f: shd.constrain(getattr(state, f), (None, "dp"))
+             for f in ("ready", "pipeline", "pipe_sum", "queue",
+                       "wait_sum", "util_ema", "cooldown", "last_dir")}
+    return state._replace(
+        rate_history=shd.constrain(state.rate_history, ("dp",)),
+        ctrl=jax.tree.map(lambda x: shd.constrain(x, ("dp",)), state.ctrl),
+        **lanes)
+
+
+def _batch_ctrl_tick(cfg, ctrls, state: BatchState, acc, arr_w,
                      minute_idx):
-    """Block-head tick for all lanes: fused plant flow on [L], then each
-    controller's decide vmapped over ITS [W] slice (P decide subgraphs
-    total), then the shared scaling semantics back on [L]. The plant
-    pieces are cluster.py's own shape-agnostic helpers, so the batched
-    and single-lane dynamics cannot drift apart."""
+    """Block-head tick for all lanes: fused plant flow on [P, W], then
+    each controller's decide vmapped over ITS [W] row (P decide
+    subgraphs total), then the shared scaling semantics back on [P, W].
+    The plant pieces are cluster.py's own shape-agnostic helpers, so the
+    batched and single-lane dynamics cannot drift apart."""
     ready, pipeline, pipe_sum = _pop_pipeline(
         state.ready, state.pipeline, state.pipe_sum)
 
-    arr_l = jnp.tile(arr_w, len(ctrls))
+    arr_pw = jnp.broadcast_to(arr_w, ready.shape)
     (queue, wait_sum, util_ema, served, violated, cold, resp,
      util) = _flow_tick(cfg, ready, state.queue, state.wait_sum,
-                        state.util_ema, arr_l)
+                        state.util_ema, arr_pw)
 
+    W = arr_w.shape[0]
     total = ready + pipe_sum
     new_ctrl, desired, cool_req = [], [], []
     for p, c in enumerate(ctrls):
-        sl = slice(p * W, (p + 1) * W)
-        obs = Obs(ready_total=total[sl], ready=ready[sl],
-                  util_ema=util_ema[sl], queue=queue[sl], rate_rps=arr_w,
+        obs = Obs(ready_total=total[p], ready=ready[p],
+                  util_ema=util_ema[p], queue=queue[p], rate_rps=arr_w,
                   rate_history=state.rate_history, minute_idx=minute_idx)
         cs, des, coo = jax.vmap(
             c.decide, in_axes=(0, Obs(0, 0, 0, 0, 0, 0, None)))(
@@ -105,8 +132,8 @@ def _batch_ctrl_tick(cfg, ctrls, W, state: BatchState, acc, arr_w,
         desired.append(jnp.asarray(des, jnp.float32))
         cool_req.append(jnp.broadcast_to(
             jnp.asarray(coo, jnp.float32), (W,)))
-    desired = jnp.clip(jnp.concatenate(desired), 0.0, cfg.max_replicas)
-    cool_req = jnp.concatenate(cool_req)
+    desired = jnp.clip(jnp.stack(desired), 0.0, cfg.max_replicas)
+    cool_req = jnp.stack(cool_req)
 
     lim, act = apply_decision(
         LimiterState(cooldown=state.cooldown, last_dir=state.last_dir),
@@ -126,13 +153,13 @@ def _batch_ctrl_tick(cfg, ctrls, W, state: BatchState, acc, arr_w,
     return state, acc
 
 
-def _batch_plant_block(cfg, state: BatchState, acc, arr_l, n_ticks: int):
-    """`n_ticks` decision-free ticks for all [L] lanes — exactly
+def _batch_plant_block(cfg, state: BatchState, acc, arr_pw, n_ticks: int):
+    """`n_ticks` decision-free ticks for all [P, W] lanes — exactly
     cluster.advance_plant on the batched fields."""
     (ready, pipeline, pipe_sum, queue, wait_sum, util_ema,
      cool), acc = advance_plant(
         cfg, state.ready, state.pipeline, state.pipe_sum, state.queue,
-        state.wait_sum, state.util_ema, state.cooldown, acc, arr_l,
+        state.wait_sum, state.util_ema, state.cooldown, acc, arr_pw,
         n_ticks)
     state = state._replace(
         ready=ready, pipeline=pipeline, pipe_sum=pipe_sum, queue=queue,
@@ -141,30 +168,35 @@ def _batch_plant_block(cfg, state: BatchState, acc, arr_l, n_ticks: int):
 
 
 def make_batch_minute_step(controllers: Sequence[Controller],
-                           cfg: SimConfig = SimConfig()):
+                           cfg: SimConfig = SimConfig(), *,
+                           shard: bool = True):
     """(BatchState carry, minute_idx, rate_w [W]) stepping function for
-    the fused P x W batch: returns per-minute MinuteOut of [L] arrays
-    (lane l = p * W + w). `repro.evals.matrix` scans this directly with
-    its metric accumulator in the carry; `make_batch_simulator` wraps it
-    for materialized [P, W, M] outputs. `decide` runs exactly once per
-    controller per control step (O(P), not O(P^2))."""
+    the fused P x W batch: returns per-minute MinuteOut of [P, W]
+    arrays. `repro.evals.matrix` scans this directly with its metric
+    accumulator in the carry; `make_batch_simulator` wraps it for
+    materialized [P, W, M] outputs. `decide` runs exactly once per
+    controller per control step (O(P), not O(P^2)). With `shard` (the
+    default) every carry field is constrained over the "dp" mesh axis
+    once per minute — a no-op without an active mesh."""
     ctrls = list(controllers)
+    P = len(ctrls)
     ci = max(min(int(cfg.control_interval_sec), 60), 1)
     n_full = 60 // ci
     tail = 60 - n_full * ci
 
     def step(state: BatchState, minute_idx, rate_w):
+        if shard:
+            state = constrain_lanes(state)
+            rate_w = shd.constrain(rate_w, ("dp",))
         W = rate_w.shape[0]
         arr_w = rate_w / 60.0
-        arr_l = jnp.tile(arr_w, len(ctrls))
-        L = len(ctrls) * W
-        acc = tuple(jnp.zeros((L,), jnp.float32) for _ in _acc_init())
+        arr_pw = jnp.broadcast_to(arr_w, (P, W))
+        acc = tuple(jnp.zeros((P, W), jnp.float32) for _ in _acc_init())
 
         def block(st, a, n_ticks):
-            st, a = _batch_ctrl_tick(cfg, ctrls, W, st, a, arr_w,
-                                     minute_idx)
+            st, a = _batch_ctrl_tick(cfg, ctrls, st, a, arr_w, minute_idx)
             if n_ticks > 1:
-                st, a = _batch_plant_block(cfg, st, a, arr_l, n_ticks - 1)
+                st, a = _batch_plant_block(cfg, st, a, arr_pw, n_ticks - 1)
             return st, a
 
         if n_full == 1:
@@ -197,20 +229,26 @@ def make_batch_minute_step(controllers: Sequence[Controller],
 
 def make_batch_simulator(controllers: Sequence[Controller],
                          cfg: SimConfig = SimConfig(), *,
-                         plant_kernel: bool | None = None):
+                         plant_kernel: bool | None = None,
+                         shard: bool = True, w_chunk: int | None = None,
+                         donate: bool = False):
     """jit: rates [W, M] -> MinuteOut [P, W, M]. One compile, one
     dispatch: a single blocked scan over fused P x W plant lanes with
     exactly P (not P^2) decide evaluations per control step.
     (`plant_kernel` is accepted for signature parity with
     `make_simulator`; the fused-lane batch always uses the vector plant
-    path, which IS the kernel's oracle.)"""
+    path, which IS the kernel's oracle.)
+
+    `w_chunk` scans over chunks of the workload axis inside the same
+    dispatch, so the live plant state is [P, w_chunk] however large W
+    grows (the chunks are independent episodes; requires
+    W % w_chunk == 0). `donate` donates the rates buffer to the call.
+    """
     del plant_kernel
     ctrls = list(controllers)
-    P = len(ctrls)
-    step = make_batch_minute_step(ctrls, cfg)
+    step = make_batch_minute_step(ctrls, cfg, shard=shard)
 
-    def run(rates):
-        rates = rates.astype(jnp.float32)
+    def episode(rates):                       # [Wc, M] -> [P, Wc, M]
         W, M = rates.shape
 
         def minute(carry, rate_w):
@@ -221,11 +259,23 @@ def make_batch_simulator(controllers: Sequence[Controller],
         (_, _), out = jax.lax.scan(
             minute, (batch_initial_state(ctrls, W, cfg), jnp.int32(0)),
             rates.T)
-        # [M, L] -> [P, W, M]
-        return jax.tree.map(
-            lambda a: jnp.moveaxis(a.reshape(M, P, W), 0, -1), out)
+        return jax.tree.map(lambda a: jnp.moveaxis(a, 0, -1), out)
 
-    return jax.jit(run)
+    def run(rates):
+        rates = rates.astype(jnp.float32)
+        W, M = rates.shape
+        if w_chunk is None or w_chunk >= W:
+            return episode(rates)
+        if W % w_chunk:
+            raise ValueError(f"w_chunk {w_chunk} must divide W {W}")
+        chunked = rates.reshape(W // w_chunk, w_chunk, M)
+        _, out = jax.lax.scan(lambda c, r: (c, episode(r)), 0, chunked)
+        # [C, P, Wc, M] -> [P, W, M]
+        return jax.tree.map(
+            lambda a: jnp.moveaxis(a, 0, 1).reshape(
+                a.shape[1], W, a.shape[3]), out)
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
 def batch_simulate(controllers: Sequence[Controller], rates,

@@ -567,8 +567,27 @@ def simulate_reference(rates_per_min: jax.Array, controller: Controller,
 
 
 def make_simulator(controller: Controller, cfg: SimConfig = SimConfig(), *,
-                   plant_kernel: bool | None = None):
-    """jit(vmap(simulate)): rates [W, M] -> MinuteOut of [W, M] arrays."""
+                   plant_kernel: bool | None = None,
+                   w_chunk: int | None = None, donate: bool = False):
+    """jit(vmap(simulate)): rates [W, M] -> MinuteOut of [W, M] arrays.
+
+    Fleet knobs (mirroring `repro.scaling.batch.make_batch_simulator`):
+    `w_chunk` scans over chunks of the workload axis inside the one
+    dispatch so live plant state is [w_chunk] however large W grows
+    (chunks are independent episodes; requires W % w_chunk == 0);
+    `donate` donates the rates buffer to the call, so a fleet-sized
+    input tensor never double-buffers against the outputs."""
     fn = jax.vmap(lambda r: simulate(r, controller, cfg,
                                      plant_kernel=plant_kernel))
-    return jax.jit(fn)
+
+    def run(rates):
+        W, M = rates.shape
+        if w_chunk is None or w_chunk >= W:
+            return fn(rates)
+        if W % w_chunk:
+            raise ValueError(f"w_chunk {w_chunk} must divide W {W}")
+        chunked = rates.reshape(W // w_chunk, w_chunk, M)
+        _, out = jax.lax.scan(lambda c, r: (c, fn(r)), 0, chunked)
+        return jax.tree.map(lambda a: a.reshape((W,) + a.shape[2:]), out)
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
