@@ -1,0 +1,113 @@
+"""Policy auto-tuning throughput + tuned-vs-default REI deltas: the
+numbers behind BENCH_tuning.json.
+
+Three parts:
+
+* ``tuning_throughput`` — fused candidate evaluation (`repro.scaling.
+  batch.make_grid_evaluator` driven through `repro.tuning`): a 10^3-point
+  hpa grid (traced target x cooldown_min x tolerance, one compile) scored
+  in one dispatch, reported as candidates/sec (smoke: a 64-point grid).
+* ``tuning_refine`` / ``tuning_population`` — search-to-convergence for
+  grid+refine and population hillclimb on `archetype_pure` (SPIKE) and
+  the drift scenario `diurnal_ramp`: tuned-vs-paper-default REI delta,
+  rounds until the incumbent stops improving, candidates/sec inside the
+  search loop. Cards publish under experiments/tuning, so every winner is
+  durable as ``registry.make("tuned:<policy>@<hash>")`` — the payload
+  records the refs and re-verifies one rebuild against its card.
+
+`python -m benchmarks.run tuning --json .` writes BENCH_tuning.json.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+import repro.tuning as tuning
+from repro.scaling import registry
+from repro.sim.cluster import SimConfig
+
+SCENARIOS = ("archetype_pure", "diurnal_ramp")
+FULL = dict(n_workloads=8, minutes=240, grid_points=10,   # 10^3 candidates
+            refine=dict(points=5, rounds=4),
+            population=dict(population=32, generations=6))
+SMOKE = dict(n_workloads=2, minutes=120, grid_points=4,   # 64 candidates
+             refine=dict(points=3, rounds=2),
+             population=dict(population=8, generations=2))
+
+
+def _throughput(knobs: dict) -> dict:
+    spec = tuning.spec(
+        "bench_throughput", policy="hpa", strategy="grid",
+        points=knobs["grid_points"], scenario="archetype_pure",
+        n_workloads=knobs["n_workloads"], minutes=knobs["minutes"])
+    cands = tuning.grid_candidates(spec.space, spec.points)
+    rates = tuning.build_rates(spec)
+    evaluate = tuning.make_evaluator(spec)
+    evaluate(cands, rates)                       # compile
+    us = common.timeit(lambda: evaluate(cands, rates), warmup=0, iters=3)
+    return {"candidates": len(cands), "workloads": knobs["n_workloads"],
+            "minutes": knobs["minutes"],
+            "compiles": evaluate._cache_size(),
+            "candidates_per_sec": len(cands) / (us / 1e6),
+            "lane_minutes_per_sec": (len(cands) * knobs["n_workloads"]
+                                     * knobs["minutes"]) / (us / 1e6)}
+
+
+def _rounds_to_best(trace: list[dict], best_rei: float) -> int:
+    for rec in trace:
+        if rec["best_rei"] >= best_rei - 1e-12:
+            return rec["round"] + 1
+    return len(trace)
+
+
+def _search(strategy: str, scenario: str, knobs: dict) -> dict:
+    spec = tuning.spec(
+        f"bench_{strategy}_{scenario}", policy="hpa", strategy=strategy,
+        scenario=scenario, n_workloads=knobs["n_workloads"],
+        minutes=knobs["minutes"], **knobs[
+            "refine" if strategy == "grid_refine" else "population"])
+    run = tuning.search(spec, force=True)        # fresh timing numbers
+    r = run.result
+    return {"ref": f"tuned:hpa@{run.card['hash']}",
+            "best": r.best, "best_rei": r.best_rei,
+            "default_rei": r.default_rei,
+            "rei_delta": r.best_rei - r.default_rei,
+            "candidates": r.meta["n_candidates"],
+            "rounds_to_best": _rounds_to_best(r.trace, r.best_rei),
+            "rounds": len(r.trace),
+            "candidates_per_sec": r.meta["candidates_per_sec"],
+            "wall_s": r.meta["wall_s"]}
+
+
+def main(smoke: bool = False):
+    knobs = SMOKE if smoke else FULL
+    payload = {"throughput": _throughput(knobs), "searches": {}}
+
+    tp = payload["throughput"]
+    common.emit("tuning_throughput",
+                1e6 / tp["candidates_per_sec"],
+                f"g{tp['candidates']}_cps={tp['candidates_per_sec']:,.0f}")
+
+    for strategy, tag in (("grid_refine", "tuning_refine"),
+                          ("population", "tuning_population")):
+        deltas = []
+        for scenario in SCENARIOS:
+            res = _search(strategy, scenario, knobs)
+            payload["searches"][f"{strategy}/{scenario}"] = res
+            deltas.append(f"{scenario}:{res['rei_delta']:+.4f}")
+        cps = payload["searches"][f"{strategy}/{SCENARIOS[0]}"][
+            "candidates_per_sec"]
+        common.emit(tag, 1e6 / max(cps, 1e-9), " ".join(deltas))
+
+    # durable-winner check: the tuned: ref rebuilds straight from the card
+    ref = payload["searches"][f"grid_refine/{SCENARIOS[0]}"]["ref"]
+    ctrl = registry.make(ref, SimConfig())
+    payload["tuned_ref_check"] = {"ref": ref, "controller": ctrl.name}
+    payload["best_delta"] = max(
+        s["rei_delta"] for s in payload["searches"].values())
+
+    common.emit("tuning_best_delta",
+                0.0, f"max_rei_delta={payload['best_delta']:+.4f}",
+                payload)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,9 @@
 #
 # --json DIR writes each bench's emitted records to DIR/BENCH_<bench>.json
 # (stable schema, sorted keys) so perf numbers diff across PRs; --smoke
-# asks benches that support it (bench_sim, bench_fleet) for a
-# seconds-scale variant — the CI tier-1 smoke uploads BENCH_sim.json and
-# BENCH_fleet.json as workflow artifacts. --profile DIR wraps each bench
+# asks benches that support it (bench_sim, bench_fleet, bench_tuning) for
+# a seconds-scale variant — the CI tier-1 smoke uploads BENCH_sim.json,
+# BENCH_fleet.json and BENCH_tuning.json as workflow artifacts. --profile DIR wraps each bench
 # in jax.profiler.trace (one trace subdir per bench, viewable in
 # TensorBoard/Perfetto) so a fleet-scale regression is attributed to a
 # dispatch, not guessed at.
@@ -40,11 +40,13 @@ def main() -> None:
                             bench_classification, bench_fleet,
                             bench_labeling, bench_latency,
                             bench_pipeline_perf, bench_rei,
-                            bench_roofline, bench_sim, bench_uncertainty)
+                            bench_roofline, bench_sim, bench_tuning,
+                            bench_uncertainty)
     from benchmarks import common
     benches = [
         ("sim", bench_sim),
         ("fleet", bench_fleet),
+        ("tuning", bench_tuning),
         ("aapaset", bench_aapaset),
         ("labeling", bench_labeling),
         ("classification", bench_classification),

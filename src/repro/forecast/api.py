@@ -29,6 +29,7 @@ import jax.numpy as jnp
 RESID_RHO = 0.05         # EWMA rate for the one-step residual scale
 NATIVE_Z = 1.64          # ~90% band under a Gaussian residual model
 EPSF = 1e-9
+MIN_CONF_SCALE = 1.0     # one request/min: arrival counts resolve no finer
 
 
 class Interval(NamedTuple):
@@ -53,16 +54,26 @@ class Forecaster(NamedTuple):
     smooth: Callable[[jax.Array], jax.Array]
 
 
-def interval_confidence(iv: Interval, scale: jax.Array | None = None):
+def interval_confidence(iv: Interval, scale: jax.Array | None = None, *,
+                        floor: float = MIN_CONF_SCALE):
     """Map an interval's relative width to a confidence c in [0, 1].
 
     c = scale / (scale + width): 1 for a zero-width band, monotonically
     decreasing as the band widens. `scale` defaults to the point forecast
     (relative-width semantics); pass the conformal band's trace scale for
     a calibration-consistent signal.
+
+    The scale is floored at `floor` (default `MIN_CONF_SCALE`, one
+    request/min — the resolution of arrival counts). Without the floor an
+    idle/near-zero trace collapses the scale to ~0 and c -> width/(0 +
+    width) ~ 0 however narrow the band is, so AAPA's forecast-confidence
+    signal forced maximally conservative Algorithm-1 adjustments exactly
+    when the trace was trivially predictable. Pass the tracked
+    residual/trace scale as `floor` to tighten it further.
     """
     width = jnp.maximum(iv.hi - iv.lo, 0.0)
-    s = jnp.maximum(iv.point if scale is None else scale, EPSF)
+    s = jnp.maximum(iv.point if scale is None else scale,
+                    jnp.maximum(floor, EPSF))
     return s / (s + width)
 
 
@@ -94,6 +105,7 @@ def make_forecaster(name: str, *, init_inner, update_inner, point_fn,
 
     def smooth(y: jax.Array) -> jax.Array:
         """[..., T] -> one-step-ahead point forecasts [..., T]."""
+        y = jnp.asarray(y, jnp.float32)     # lists/tuples have no .shape
         if smooth_fn is not None:
             return smooth_fn(y)
 
@@ -103,7 +115,7 @@ def make_forecaster(name: str, *, init_inner, update_inner, point_fn,
             _, preds = jax.lax.scan(body, init(), series)
             return preds
 
-        flat = jnp.asarray(y, jnp.float32).reshape((-1, y.shape[-1]))
+        flat = y.reshape((-1, y.shape[-1]))
         return jax.vmap(scan_one)(flat).reshape(y.shape)
 
     return Forecaster(name, init, update, forecast, smooth)

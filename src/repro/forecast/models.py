@@ -29,7 +29,8 @@ def holt_winters_forecaster(*, period: int = 60, alpha: float = 0.1,
     paper Table III; the Generic-Predictive baseline, §IV.C)."""
 
     def smooth_fn(y):
-        flat = jnp.asarray(y, jnp.float32).reshape((-1, y.shape[-1]))
+        y = jnp.asarray(y, jnp.float32)
+        flat = y.reshape((-1, y.shape[-1]))
         if jax.default_backend() == "tpu":
             from repro.kernels import ops
             out = ops.holt_winters(flat, period=period, alpha=alpha,

@@ -51,7 +51,7 @@ class ModelConfig:
     norm_eps: float = 1e-5
     dtype: str = "bfloat16"
     # KV/latent cache storage dtype; "float8_e4m3fn" halves the
-    # memory-bound decode roofline term (§Perf hillclimb)
+    # memory-bound decode roofline term (§Roofline-summary)
     cache_dtype: str = "bfloat16"
     # long-context capability flag (sub-quadratic decode path exists)
     subquadratic: bool = False

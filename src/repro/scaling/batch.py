@@ -31,17 +31,26 @@ compiled call:
   ``repro.evals.fleet``).
 
 * `make_grid_simulator(name, grid, cfg)` — same-structured controllers
-  (one registry family, hyperparameters declared `stackable`). The
-  hyperparameters are stacked into arrays and the *factory itself* is
-  traced with per-lane scalars, so the policy axis is a true vmap with
-  no per-slot duplication at all. This is the cheap path for
-  hyperparameter sweeps (target CPU, panic thresholds, guardrail
-  fractions...).
+  (one registry family). Hyperparameters split two ways: `stackable`
+  keys are stacked into arrays and the *factory itself* is traced with
+  per-lane scalars (the policy axis is a true vmap with no per-slot
+  duplication); the remaining *static* keys (`horizon_min`,
+  `stride_min`, `stabilization_min`, ...) change compiled structure, so
+  the grid groups by static values and compiles once per group. This is
+  the cheap path for hyperparameter sweeps (target CPU, panic
+  thresholds, guardrail fractions...).
+
+* `make_grid_evaluator(name, cfg)` — the same fused grid lanes with
+  `repro.evals.metrics` accumulators carried inside the scan: candidates
+  come back as pooled EpisodeMetrics + REI without ever materializing a
+  [G, W, M] MinuteOut tensor. ``repro.tuning`` drives its searches
+  through this.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Sequence
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -50,9 +59,9 @@ from repro.scaling import registry
 from repro.scaling.api import (Controller, LimiterState, Obs,
                                apply_decision)
 from repro.sim.cluster import (MinuteOut, SimConfig, advance_plant,
-                               simulate, _acc_fold, _acc_init,
-                               _apply_scaling, _flow_tick, _pop_pipeline,
-                               initial_state)
+                               minute_step, simulate, _acc_fold,
+                               _acc_init, _apply_scaling, _flow_tick,
+                               _pop_pipeline, initial_state)
 
 
 class BatchState(NamedTuple):
@@ -316,41 +325,213 @@ def make_forecast_batch_simulator(policies: Sequence[str],
     return run
 
 
-def make_grid_simulator(name: str, grid: Sequence[dict],
-                        cfg: SimConfig = SimConfig(), *,
-                        classify=None, **fixed):
-    """One policy family, a grid of hyperparameter points, one compile.
+def _canon_static(v):
+    """Canonical hashable form of a static hyperparameter value: jit
+    static-arg cache keys and artifact JSON must agree on it. Ints stay
+    ints — factories index/`arange` with keys like `horizon_min`."""
+    if isinstance(v, (bool, str)):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    return v
 
-    `grid` is a list of dicts over the family's `stackable` keys; every
-    point must set the same keys. Returns a jitted fn
-    rates [W, M] -> MinuteOut [len(grid), W, M].
+
+def _validate_hyper(sp, keys, what: str) -> None:
+    bad = set(keys) - set(sp.defaults)
+    if bad:
+        raise TypeError(f"policy {sp.name!r} has no hyperparameters "
+                        f"{sorted(bad)} ({what}); "
+                        f"accepts {sorted(sp.defaults)}")
+
+
+def grid_split(name: str, grid: Sequence[dict], fixed: dict):
+    """Validate a hyperparameter grid and split it into traced
+    stackables vs static keys.
+
+    Every grid point must set the same keys, all drawn from the policy's
+    accepted hyperparameters (a typo'd key raises the same clean
+    TypeError `registry.get_controller` gives, not an opaque factory
+    error deep inside vmap tracing). Keys in the family's `stackable`
+    tuple are *traced* — stacked into f32 arrays and vmapped as fused
+    lanes; everything else is *static* — it changes compiled structure
+    (buffer lengths, reclassify cadence), so points are grouped by their
+    static values and each group compiles once.
+
+    Returns (spec, traced_keys, groups) with groups an ordered list of
+    (static_items, grid_indices) preserving first-appearance order.
     """
     sp = registry.spec(name)
     if not grid:
         raise ValueError("empty hyperparameter grid")
+    _validate_hyper(sp, fixed, "fixed kwargs")
     keys = sorted(grid[0])
-    bad = set(keys) - set(sp.stackable)
-    if bad:
-        raise TypeError(f"policy {name!r} cannot stack {sorted(bad)}; "
-                        f"stackable: {sorted(sp.stackable)}")
+    _validate_hyper(sp, keys, "grid keys")
+    overlap = set(keys) & set(fixed)
+    if overlap:
+        raise TypeError(f"grid key(s) {sorted(overlap)} for policy "
+                        f"{name!r} are also passed as fixed kwargs")
     for g in grid:
         if sorted(g) != keys:
             raise ValueError("every grid point must set the same keys")
-    stacked = {k: jnp.asarray([float(g[k]) for g in grid], jnp.float32)
-               for k in keys}
+    traced = tuple(k for k in keys if k in sp.stackable)
+    static = tuple(k for k in keys if k not in sp.stackable)
+    groups: dict[tuple, list[int]] = {}
+    order: list[tuple] = []
+    for i, g in enumerate(grid):
+        skey = tuple((k, _canon_static(g[k])) for k in static)
+        if skey not in groups:
+            groups[skey] = []
+            order.append(skey)
+        groups[skey].append(i)
+    return sp, traced, [(skey, tuple(groups[skey])) for skey in order]
 
-    def sim_one(hyper, rates):
+
+def _grid_factory(sp, cfg, classify, fixed):
+    """(traced hyper dict, static hyper dict) -> Controller, with the
+    registry defaults + `fixed` underneath — the one place grid lanes
+    build controllers, shared by the MinuteOut and metrics paths."""
+    def build(hyper, static_kw):
         kw = dict(sp.defaults)
         kw.update(fixed)
+        kw.update(static_kw)
         kw.update(hyper)       # traced per-lane scalars
         if sp.needs_classifier:
-            ctrl = sp.factory(cfg, classify or registry.default_classify,
+            return sp.factory(cfg, classify or registry.default_classify,
                               **kw)
-        else:
-            ctrl = sp.factory(cfg, **kw)
-        return simulate(rates, ctrl, cfg)
+        return sp.factory(cfg, **kw)
+    return build
 
-    over_workloads = jax.vmap(sim_one, in_axes=(None, 0))
-    over_grid = jax.vmap(over_workloads, in_axes=(0, None))
-    return jax.jit(lambda rates: over_grid(
-        stacked, jnp.asarray(rates, jnp.float32)))
+
+def _stack_traced(grid: Sequence[dict], idxs, traced) -> dict:
+    return {k: jnp.asarray([float(grid[i][k]) for i in idxs], jnp.float32)
+            for k in traced}
+
+
+def _stitch(parts, order):
+    """Concatenate per-group [Gk, ...] pytrees back into grid order."""
+    cat = (parts[0] if len(parts) == 1
+           else jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *parts))
+    perm = np.argsort(np.asarray(order, np.int64), kind="stable")
+    if (perm == np.arange(perm.size)).all():
+        return cat
+    return jax.tree.map(lambda a: a[perm], cat)
+
+
+def make_grid_simulator(name: str, grid: Sequence[dict],
+                        cfg: SimConfig = SimConfig(), *,
+                        classify=None, **fixed):
+    """One policy family, a grid of hyperparameter points, few compiles.
+
+    `grid` is a list of dicts over the family's accepted hyperparameters;
+    every point must set the same keys (`fixed` pins the rest). Stackable
+    keys are traced f32 lanes under one vmap; static keys
+    (`horizon_min`, `stride_min`, `stabilization_min`, ...) group the
+    grid and compile once per static group. Returns a fn
+    rates [W, M] -> MinuteOut [len(grid), W, M] (grid order preserved);
+    its `_cache_size()` reports the compile count for the one-compile-
+    per-static-group pin.
+    """
+    _, traced, groups = grid_split(name, grid, fixed)
+    sp = registry.spec(name)
+    build = _grid_factory(sp, cfg, classify, fixed)
+    grid = [dict(g) for g in grid]
+
+    def run_group(lane_ids, stacked, rates, static_kw):
+        def sim_one(_, hyper, r):
+            return simulate(r, build(hyper, dict(static_kw)), cfg)
+        over_w = jax.vmap(sim_one, in_axes=(None, None, 0))
+        return jax.vmap(over_w, in_axes=(0, 0, None))(
+            lane_ids, stacked, rates)
+
+    run_group = jax.jit(run_group, static_argnums=(3,))
+
+    def run(rates):
+        rates = jnp.asarray(rates, jnp.float32)
+        parts, order = [], []
+        for skey, idxs in groups:
+            parts.append(run_group(jnp.arange(len(idxs)),
+                                   _stack_traced(grid, idxs, traced),
+                                   rates, skey))
+            order.extend(idxs)
+        return _stitch(parts, order)
+
+    run._cache_size = run_group._cache_size
+    return run
+
+
+def make_grid_evaluator(name: str, cfg: SimConfig = SimConfig(), *,
+                        classify=None, bins: int | None = None,
+                        rei_kw: dict | None = None, **fixed):
+    """Fused candidate scoring: grid lanes carry `repro.evals.metrics`
+    accumulators *inside* the scan and come back as pooled
+    EpisodeMetrics + REI per candidate — a [G, W, M] MinuteOut tensor
+    never materializes, so scoring 10^3+ candidates is O(G * bins)
+    memory. This is the evaluation core of ``repro.tuning``.
+
+    Returns ``evaluate(grid, rates [W, M]) -> (EpisodeMetrics [G],
+    REIBreakdown [G])``. The grid is passed per call (search strategies
+    re-propose candidates every round); the compiled group body is
+    shared across calls, so a search whose rounds keep candidate counts
+    constant compiles once per static group total (`_cache_size()` pins
+    it). REI baselines default from the episode shape; `rei_kw`
+    overrides (e.g. paper-constant baselines).
+    """
+    # lazy: repro.evals.matrix imports this module at package init
+    from repro.evals import metrics as EM
+    from repro.evals import rei as ER
+    sp = registry.spec(name)
+    _validate_hyper(sp, fixed, "fixed kwargs")
+    build = _grid_factory(sp, cfg, classify, fixed)
+    bins = EM.DEFAULT_BINS if bins is None else bins
+    edges = EM.response_edges(bins, cfg.resp_cap_sec)
+    rei_kw = dict(rei_kw or {})
+
+    def eval_group(lane_ids, stacked, rates, static_kw):
+        W, _ = rates.shape
+
+        def eval_one(_, hyper):
+            ctrl = build(hyper, dict(static_kw))
+            st0 = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (W,) + jnp.shape(a)),
+                initial_state(ctrl, cfg))
+            idx0 = jnp.zeros((W,), jnp.int32)
+
+            def one_lane(s, i, r):
+                (s2, i2), m = minute_step(cfg, ctrl, (s, i), r)
+                return s2, i2, m
+
+            def body(carry, rate_w):
+                st, idx, acc = carry
+                st, idx, m = jax.vmap(one_lane)(st, idx, rate_w)
+                return (st, idx,
+                        EM.accum_update_pooled(acc, m, edges)), None
+
+            (_, _, acc), _ = jax.lax.scan(
+                body, (st0, idx0, EM.accum_init(bins)), rates.T)
+            return acc
+
+        return jax.vmap(eval_one)(lane_ids, stacked)
+
+    eval_group = jax.jit(eval_group, static_argnums=(3,))
+
+    def evaluate(grid, rates):
+        _, traced, groups = grid_split(name, grid, fixed)
+        grid = [dict(g) for g in grid]
+        rates = jnp.asarray(rates, jnp.float32)
+        W, M = rates.shape
+        parts, order = [], []
+        for skey, idxs in groups:
+            parts.append(eval_group(jnp.arange(len(idxs)),
+                                    _stack_traced(grid, idxs, traced),
+                                    rates, skey))
+            order.extend(idxs)
+        met = EM.finalize(_stitch(parts, order), edges)
+        rb = ER.rei(met.slo_violation_rate, met.replica_minutes,
+                    met.scaling_actions,
+                    **{"minutes": M, "n_workloads": W, **rei_kw})
+        return met, rb
+
+    evaluate._cache_size = eval_group._cache_size
+    return evaluate

@@ -52,7 +52,19 @@ def available() -> list[str]:
     return sorted(_REGISTRY)
 
 
+#: ``registry.make("tuned:<policy>@<hash12>", cfg)`` rebuilds the winner
+#: of a published ``repro.tuning`` search card exactly.
+TUNED_PREFIX = "tuned:"
+
+
+def _resolve_tuned(name: str) -> tuple[str, dict[str, Any]]:
+    from repro.tuning import artifacts as tuning_artifacts
+    return tuning_artifacts.resolve(name[len(TUNED_PREFIX):])
+
+
 def spec(name: str) -> PolicySpec:
+    if name.startswith(TUNED_PREFIX):
+        return spec(_resolve_tuned(name)[0])
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -69,7 +81,16 @@ def default_classify(feats):
 
 def get_controller(name: str, cfg, *, classify=None,
                    **overrides) -> Controller:
-    """Build a registered controller with defaults + overrides applied."""
+    """Build a registered controller with defaults + overrides applied.
+
+    ``tuned:<policy>@<hash12>`` names resolve through the content-
+    addressed tuning cards (``repro.tuning.artifacts``): the card's best
+    point is applied over the base policy's defaults, then `overrides` on
+    top — bit-identical to the controller the search scored."""
+    if name.startswith(TUNED_PREFIX):
+        base, params = _resolve_tuned(name)
+        return get_controller(base, cfg, classify=classify,
+                              **{**params, **overrides})
     sp = spec(name)
     kw = dict(sp.defaults)
     unknown = set(overrides) - set(kw)

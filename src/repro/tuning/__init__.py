@@ -1,0 +1,23 @@
+"""Policy auto-tuning at simulator speed (paper §IV.C, done properly):
+search strategies over fused candidate lanes with content-addressed
+tuning cards and a ``tuned:`` registry namespace.
+
+    import repro.tuning as tuning
+    run = tuning.search(tuning.spec("hpa_spike", policy="hpa"))
+    ctrl = registry.make(f"tuned:hpa@{run.card['hash']}", cfg)
+
+NB: the package re-exports the ``search`` *function*, so
+``repro.tuning.search`` is the front door, not the submodule — use
+``from repro.tuning import search as ...`` accordingly.
+"""
+from repro.tuning.search import (DEFAULT_SPACES, STRATEGIES, TuneResult,
+                                 TuneRun, TuneSpec, build_rates,
+                                 default_candidate, grid_candidates,
+                                 make_evaluator, run_search, search,
+                                 smoke_spec, spec)
+from repro.tuning import artifacts
+
+__all__ = ["DEFAULT_SPACES", "STRATEGIES", "TuneResult", "TuneRun",
+           "TuneSpec", "artifacts", "build_rates", "default_candidate",
+           "grid_candidates", "make_evaluator", "run_search", "search",
+           "smoke_spec", "spec"]

@@ -115,6 +115,20 @@ def test_batch_backtest_bit_exact_vs_per_forecaster():
                                       err_msg=name)
 
 
+def test_smooth_accepts_lists_and_1d_input():
+    """`smooth` coerces before touching .shape, so Python lists and bare
+    1-D traces work on every forecaster (including Holt-Winters' custom
+    offline path, which had its own pre-coercion .shape read)."""
+    trace = [3.0, 4.0, 5.0, 6.0, 5.0, 4.0] * 20
+    for name in registry.available():
+        f = registry.make(name)
+        from_list = f.smooth(trace)
+        from_arr = f.smooth(jnp.asarray(trace, jnp.float32))
+        assert from_list.shape == (len(trace),), name
+        np.testing.assert_array_equal(np.asarray(from_list),
+                                      np.asarray(from_arr), err_msg=name)
+
+
 def test_smooth_matches_stream_path_for_scan_forecasters():
     """Forecasters without a custom offline kernel path must have
     `smooth` == the streaming scan exactly."""
@@ -216,6 +230,27 @@ def test_interval_confidence_monotone_in_width():
     assert cs[0] == pytest.approx(1.0)
     assert all(a > b for a, b in zip(cs, cs[1:]))
     assert all(0.0 <= c <= 1.0 for c in cs)
+
+
+def test_interval_confidence_idle_trace_stays_high():
+    """An idle/near-zero trace must not collapse confidence: with the
+    scale floored at MIN_CONF_SCALE (1 req/min), a tight band around a
+    ~0 point forecast reads as near-certain, not maximally uncertain."""
+    from repro.forecast.api import Interval, MIN_CONF_SCALE
+    f = registry.make("ewma")
+    st = f.init()
+    for _ in range(60):                 # a workload that is simply idle
+        st = f.update(st, jnp.float32(0.0))
+    iv = f.forecast(st, 15)
+    assert float(iv.point) == pytest.approx(0.0, abs=1e-6)
+    assert float(interval_confidence(iv)) > 0.95
+    # exact floor semantics: c = floor / (floor + width)
+    zero = Interval(jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.5))
+    assert float(interval_confidence(zero)) == pytest.approx(
+        MIN_CONF_SCALE / (MIN_CONF_SCALE + 0.5), rel=1e-6)
+    # a caller-tracked scale still tightens the floor
+    assert float(interval_confidence(zero, scale=jnp.float32(10.0))) \
+        == pytest.approx(10.0 / 10.5, rel=1e-6)
 
 
 # --------------------------------------- wired into the control plane ----

@@ -88,9 +88,36 @@ def test_grid_simulator_matches_individual_factories():
                                    rtol=1e-5)
 
 
-def test_grid_simulator_rejects_unstackable_keys():
-    with pytest.raises(TypeError):
-        batch.make_grid_simulator("hpa", [{"stabilization_min": 3.0}], CFG)
+def test_grid_simulator_sweeps_static_keys():
+    """Non-stackable keys (here stabilization_min) are swept via static
+    grouping: one compile per distinct static value, grid-order results
+    that match the per-candidate factories."""
+    grid = [{"target": t, "stabilization_min": s}
+            for s in (2.0, 8.0) for t in (0.5, 0.8)]
+    rates = _rates((2, 90), lam=2400, seed=3)
+    run = batch.make_grid_simulator("hpa", grid, CFG)
+    out = run(rates)
+    assert out.served.shape == (4, 2, 90)
+    assert run._cache_size() == 2        # one compile per static group
+    for i, g in enumerate(grid):
+        single = make_simulator(
+            registry.get_controller("hpa", CFG, **g), CFG)(rates)
+        np.testing.assert_allclose(np.asarray(out.served[i]),
+                                   np.asarray(single.served), rtol=1e-5,
+                                   err_msg=f"grid[{i}]={g}")
+
+
+def test_grid_simulator_validates_keys_up_front():
+    """Typo'd grid keys and fixed kwargs fail eagerly with the accepted
+    hyperparameter list, not at trace time inside the factory."""
+    with pytest.raises(TypeError, match=r"cooldwon_min.*accepts"):
+        batch.make_grid_simulator("hpa", [{"target": 0.5}], CFG,
+                                  cooldwon_min=2.0)
+    with pytest.raises(TypeError, match=r"grid keys.*accepts"):
+        batch.make_grid_simulator("hpa", [{"tarket": 0.5}], CFG)
+    with pytest.raises(TypeError, match="also passed as fixed"):
+        batch.make_grid_simulator("hpa", [{"target": 0.5}], CFG,
+                                  target=0.7)
 
 
 # ------------------------------------------------------------ scenarios ----

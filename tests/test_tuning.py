@@ -1,0 +1,178 @@
+"""The `repro.tuning` search plane: fused grid evaluator parity with the
+per-candidate controller loop, one-compile-per-static-group pins,
+content-addressed tuning cards (determinism + cache hits), the `tuned:`
+registry namespace, and a pinned scenario where grid+refine beats the
+paper defaults. Full-size searches carry the `slow` marker."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.tuning as tuning
+from repro.tuning import artifacts
+from repro.evals import matrix as EX
+from repro.evals import metrics as EM
+from repro.evals import rei as ER
+from repro.scaling import batch, registry
+from repro.sim.cluster import SimConfig, simulate
+
+CFG = SimConfig()
+
+
+def _rates(shape, lam=2400, seed=0):
+    return np.random.default_rng(seed).poisson(
+        lam, shape).astype(np.float32)
+
+
+# ---------------------------------------------------- fused evaluation ----
+def test_grid_evaluator_matches_controller_loop():
+    """Pooled EpisodeMetrics + REI per fused candidate lane equal the
+    `get_controller`-per-candidate evaluation of the same points."""
+    grid = [{"target": 0.5, "cooldown_min": 2.0},
+            {"target": 0.7, "cooldown_min": 5.0},
+            {"target": 0.9, "cooldown_min": 8.0}]
+    rates = _rates((2, 120), seed=1)
+    met, rb = batch.make_grid_evaluator("hpa", CFG)(grid, rates)
+    ctrls = [registry.get_controller("hpa", CFG, **g) for g in grid]
+    pooled, _ = EX.evaluate_controllers(ctrls, jnp.asarray(rates), CFG,
+                                        per_workload=False)
+    for f in EM.EpisodeMetrics._fields:
+        np.testing.assert_allclose(np.asarray(getattr(met, f)),
+                                   np.asarray(getattr(pooled, f)),
+                                   rtol=2e-5, atol=1e-5, err_msg=f)
+    ref_rei = ER.rei(pooled.slo_violation_rate, pooled.replica_minutes,
+                     pooled.scaling_actions, minutes=120, n_workloads=2)
+    np.testing.assert_allclose(np.asarray(rb.rei),
+                               np.asarray(ref_rei.rei),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_grid_evaluator_one_compile_per_static_group():
+    """Traced points share one compile; each distinct static value adds
+    exactly one more; re-evaluating with new traced values adds none."""
+    rates = _rates((2, 60), seed=2)
+    ev = batch.make_grid_evaluator("hpa", CFG)
+    ev([{"target": t} for t in (0.5, 0.7, 0.9)], rates)
+    assert ev._cache_size() == 1
+    ev([{"target": t} for t in (0.45, 0.85, 0.65)], rates)
+    assert ev._cache_size() == 1         # same shapes, no retrace
+    ev([{"target": 0.6, "stabilization_min": s} for s in (2.0, 8.0)],
+       rates)
+    assert ev._cache_size() == 3         # two new static groups of G=1
+
+
+def test_search_space_validation():
+    with pytest.raises(TypeError, match=r"targett.*accepts"):
+        tuning.spec("x", policy="hpa", space={"targett": (0.4, 0.9)})
+    with pytest.raises(TypeError, match="not stackable"):
+        tuning.spec("x", policy="hpa",
+                    space={"stabilization_min": ("range", 1.0, 9.0)})
+    with pytest.raises(ValueError, match="empty range"):
+        tuning.spec("x", policy="hpa", space={"target": (0.9, 0.4)})
+    with pytest.raises(ValueError, match="unknown strategy"):
+        tuning.spec("x", policy="hpa", strategy="simulated_annealing")
+
+
+# ------------------------------------------------- artifacts + caching ----
+def _tiny_spec(name="tiny", **kw):
+    base = dict(policy="hpa", strategy="grid", points=3,
+                space={"target": (0.45, 0.9)},
+                n_workloads=2, minutes=60)
+    base.update(kw)
+    return tuning.spec(name, **base)
+
+
+def test_artifact_determinism_and_cache_hit(tmp_path, monkeypatch):
+    sp = _tiny_spec(name="det")
+    run1 = tuning.search(sp, root=tmp_path)
+    assert not run1.cached
+    # identical spec -> identical address, and the cached card is served
+    # without re-running the search
+    calls = []
+    real = tuning.run_search
+    import sys
+    search_mod = sys.modules["repro.tuning.search"]
+    monkeypatch.setattr(search_mod, "run_search",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    run2 = tuning.search(sp, root=tmp_path)
+    assert run2.cached and not calls
+    assert run2.card["hash"] == run1.card["hash"]
+    assert run2.result.best == run1.result.best
+    assert run2.result.best_rei == pytest.approx(run1.result.best_rei)
+    # different seed -> different address
+    assert artifacts.card_hash(
+        _tiny_spec(name="det", seed=1).content_key() | {"classifier": ""}
+    ) != artifacts.card_hash(sp.content_key() | {"classifier": ""})
+    # force=True re-executes and republishes at the same address
+    run3 = tuning.search(sp, root=tmp_path, force=True)
+    assert not run3.cached and calls
+    assert run3.card["hash"] == run1.card["hash"]
+
+
+def test_tuned_registry_round_trip(tmp_path, monkeypatch):
+    """`registry.make("tuned:<policy>@<hash>")` rebuilds the winning
+    controller bit-exactly from the content-addressed card."""
+    sp = _tiny_spec(name="roundtrip")
+    run = tuning.search(sp, root=tmp_path)
+    monkeypatch.setattr(artifacts, "DEFAULT_ROOT", tmp_path)
+    ref = f"tuned:hpa@{run.card['hash']}"
+    tuned = registry.make(ref, CFG)
+    direct = registry.make("hpa", CFG, **run.result.best)
+    assert registry.spec(ref).name == "hpa"
+    rates = jnp.asarray(_rates(90, seed=3))
+    out_t, out_d = simulate(rates, tuned, CFG), simulate(rates, direct, CFG)
+    for f in out_t._fields:
+        assert bool(jnp.array_equal(getattr(out_t, f),
+                                    getattr(out_d, f))), f
+    # overrides still apply on top of the tuned point
+    hot = registry.make(ref, CFG, cooldown_min=0.0)
+    assert hot.name == tuned.name
+    # wrong-policy refs and unknown hashes fail loudly
+    with pytest.raises(ValueError, match="tuned"):
+        registry.make(f"tuned:kpa@{run.card['hash']}", CFG)
+    with pytest.raises(FileNotFoundError):
+        registry.make("tuned:hpa@000000000000", CFG)
+
+
+def test_population_search_is_deterministic():
+    sp = tuning.spec("pop", policy="kpa", strategy="population",
+                     population=6, generations=2, n_workloads=2,
+                     minutes=60)
+    r1, r2 = tuning.run_search(sp), tuning.run_search(sp)
+    assert r1.best == r2.best
+    assert r1.best_rei == pytest.approx(r2.best_rei)
+    assert [t["best_rei"] for t in r1.trace] == \
+        pytest.approx([t["best_rei"] for t in r2.trace])
+
+
+# ------------------------------------------------ tuned beats defaults ----
+def test_grid_refine_beats_paper_defaults_on_drift():
+    """Pinned scenario: on diurnal_ramp (the drift case) a small
+    grid+refine over the hpa box strictly improves REI over the paper
+    defaults — the experiment the tuning plane exists to run."""
+    sp = tuning.spec("drift_refine", policy="hpa", strategy="grid_refine",
+                     scenario="diurnal_ramp", points=3, rounds=2,
+                     n_workloads=2, minutes=120)
+    r = tuning.run_search(sp)
+    assert r.best_rei > r.default_rei + 0.01
+    assert len(r.trace) == 2
+    assert r.meta["n_candidates"] == sum(t["n_candidates"]
+                                         for t in r.trace)
+    # refine round 2 searches a shrunk box around the round-1 incumbent
+    b0, b1 = (t["box"]["target"] for t in r.trace)
+    assert (b1[1] - b1[0]) == pytest.approx(
+        (b0[1] - b0[0]) * sp.shrink, rel=1e-6)
+
+
+@pytest.mark.slow
+def test_full_searches_converge():
+    """Nightly: full-size grid+refine and population searches on the
+    SPIKE scenario find at-least-as-good points as the quick versions
+    and converge (final-round incumbent == overall best)."""
+    for strategy in ("grid_refine", "population"):
+        sp = tuning.spec(f"full_{strategy}", policy="hpa",
+                         strategy=strategy, scenario="archetype_pure",
+                         points=5, rounds=4, population=32, generations=6,
+                         n_workloads=4, minutes=240)
+        r = tuning.run_search(sp)
+        assert r.best_rei >= r.default_rei
+        assert r.trace[-1]["best_rei"] == pytest.approx(r.best_rei)

@@ -1,12 +1,13 @@
-"""Render §Eval-cards / §Dry-run-summary / §Roofline-summary /
-§Perf-hillclimb markdown tables from the experiment JSONs and the
-content-addressed `repro.evals` result cards, and append them to
-EXPERIMENTS.md (replacing everything after the AUTOGEN marker)."""
+"""Render §Eval-cards / §Tuning-cards / §Dry-run-summary /
+§Roofline-summary markdown tables from the experiment JSONs and the
+content-addressed `repro.evals` / `repro.tuning` result cards, and
+append them to EXPERIMENTS.md (replacing everything after the AUTOGEN
+marker)."""
 import json
 import pathlib
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-MARKER = "<!-- AUTOGEN SECTIONS BELOW: dryrun-summary / roofline-summary / hillclimb -->"
+MARKER = "<!-- AUTOGEN SECTIONS BELOW: eval-cards / tuning-cards / dryrun-summary / roofline-summary -->"
 
 
 def load(p):
@@ -92,7 +93,7 @@ def roofline_table():
     LEVERS = {
         "train": "fuse/stream optimizer + larger per-device batch to raise arithmetic intensity",
         "prefill": "wider q/kv tiles + fp8 KV writes to cut cache-write bytes",
-        "decode": "fp8 KV cache halves cache reads (see hillclimb); batch more sequences per chip",
+        "decode": "fp8 KV cache halves cache reads; batch more sequences per chip",
     }
     for k in sorted(r):
         v = r[k]
@@ -109,32 +110,32 @@ def roofline_table():
     return "\n".join(lines)
 
 
-def hillclimb_table():
-    r = load("experiments/hillclimb/results.json")
-    lines = [
-        "\n## §Perf-hillclimb (three cells, baseline vs variant)\n",
-        "| cell | variant | compute_s | memory_s | coll_s | dominant-term delta |",
-        "|---|---|---|---|---|---|",
-    ]
-    pairs = {}
-    for k, v in r.items():
-        arch, shape, tag = k.split("|")
-        pairs.setdefault((arch, shape), {})[tag] = v
-    for (arch, shape), d in sorted(pairs.items()):
-        base = d.get("baseline")
-        for tag, v in d.items():
-            if "error" in v:
-                lines.append(f"| {arch} {shape} | {tag} | - | - | - | ERROR {v['error'][:40]} |")
-                continue
-            delta = ""
-            if tag != "baseline" and base and "error" not in base:
-                dom = base["dominant"] + "_s"
-                delta = (f"{base[dom]:.2e} -> {v[dom]:.2e} "
-                         f"({(v[dom]/base[dom]-1)*100:+.0f}%)")
-            lines.append(
-                f"| {arch} {shape} | {tag} | {v['compute_s']:.2e} "
-                f"| {v['memory_s']:.2e} | {v['collective_s']:.2e} "
-                f"| {delta} |")
+def tuning_tables():
+    """One row per `repro.tuning` card under experiments/tuning: the
+    search winner vs the paper default, addressed by content hash (the
+    same hash `registry.make("tuned:<policy>@<hash>")` resolves)."""
+    root = ROOT / "experiments/tuning"
+    cards = sorted(root.glob("*/card.json")) if root.exists() else []
+    lines = ["\n## §Tuning-cards (content-addressed `repro.tuning` runs)\n"]
+    if not cards:
+        lines.append("(no tuning cards yet — run "
+                     "`repro.tuning.search.search` or "
+                     "`benchmarks/run.py tuning`)")
+        return "\n".join(lines)
+    lines += ["| card | policy | strategy | candidates | default REI "
+              "| tuned REI | delta | best point |",
+              "|---|---|---|---|---|---|---|---|"]
+    for path in cards:
+        card = json.loads(path.read_text())
+        best = ", ".join(f"{k}={v:.3g}" if isinstance(v, float)
+                         else f"{k}={v}"
+                         for k, v in sorted(card["best"].items()))
+        lines.append(
+            f"| {path.parent.name} | {card['policy']} "
+            f"| {card['spec']['strategy']} "
+            f"| {card['meta']['n_candidates']} "
+            f"| {card['default_rei']:.3f} | {card['best_rei']:.3f} "
+            f"| {card['rei_delta']:+.3f} | {best} |")
     return "\n".join(lines)
 
 
@@ -142,8 +143,8 @@ def main():
     p = ROOT / "EXPERIMENTS.md"
     text = p.read_text() if p.exists() else f"# Experiments\n\n{MARKER}\n"
     head = text.split(MARKER)[0] + MARKER + "\n"
-    p.write_text(head + evals_tables() + "\n" + dryrun_table() + "\n"
-                 + roofline_table() + "\n" + hillclimb_table() + "\n")
+    p.write_text(head + evals_tables() + "\n" + tuning_tables() + "\n"
+                 + dryrun_table() + "\n" + roofline_table() + "\n")
     print("EXPERIMENTS.md updated")
 
 
