@@ -52,7 +52,27 @@ def run(minutes: int, policy: str, trained, params, cfg, rates,
             print(f"  min {minute:3d} rate={rates[minute]:7.1f}/min "
                   f"arch={label:12s} replicas={eng.ready_replicas}"
                   f"+{len(eng.starting)} queue={len(eng.queue)}")
+    print_why_scaled(auto.decision_trace())
     return eng.summary()
+
+
+def print_why_scaled(trace) -> None:
+    """'Why scaled' digest of the adapter's DecisionRecord log: every
+    executed action with the signals that drove it."""
+    n = len(trace.desired)
+    moves = np.nonzero((trace.scale_up > 0.5) | (trace.scale_down > 0.5)
+                       | (trace.cooldown_blocked > 0.5))[0]
+    print(f"  why scaled: {len(moves)} actions over {n} decisions")
+    for i in moves[:12]:
+        kind = ("up" if trace.scale_up[i] > 0.5 else
+                "down" if trace.scale_down[i] > 0.5 else "held(cooldown)")
+        fc = (f" fc={trace.fc_point[i]:.0f}/min"
+              if np.isfinite(trace.fc_point[i]) else "")
+        print(f"    min {int(trace.minute[i]):3d} {kind:14s} "
+              f"ready={trace.ready[i]:.0f} -> target={trace.target[i]:.0f}"
+              f" rate={trace.rate_rps[i]:.1f}/s{fc}")
+    if len(moves) > 12:
+        print(f"    ... {len(moves) - 12} more")
 
 
 def main():

@@ -63,6 +63,10 @@ class FleetSpec:
     seed: int = 0
     sim: tuple[tuple[str, Any], ...] = ()
     bins: int = EM.DEFAULT_BINS
+    #: capture the decision trace for this many deterministically
+    #: sampled lanes PER CHUNK (0 = telemetry off). The trace rides the
+    #: chunk scan as ys, so the carry stays O(P * bins) at any W.
+    trace_lanes: int = 0
 
     def __post_init__(self):
         if self.n_workloads % self.w_chunk:
@@ -134,22 +138,33 @@ def make_fleet_runner(spec_: FleetSpec, classify=None, *,
     dispatch. A lax.scan over chunks runs each [P, Wc] episode with the
     workload axis pooled in-scan, tree-summing chunk accumulators in the
     carry; the rates buffer is donated (it is dead after the scan reads
-    it). The chunk's lane axis is constrained over "dp"."""
+    it). The chunk's lane axis is constrained over "dp".
+
+    With ``spec_.trace_lanes > 0`` the runner returns ``(accum,
+    ControlTrace)`` — the trace of K sampled lanes per chunk rides the
+    chunk scan as ys (decisions leaves [C, M, H, P, K], minutes
+    [C, M, P, K]); the carry is unchanged."""
     cfg = spec_.sim_config()
     ctrls = controllers(spec_, classify)
     edges = EM.response_edges(spec_.bins, cfg.resp_cap_sec)
-    lanes = _lane_runner(ctrls, cfg, edges, per_workload=False)
+    telemetry = spec_.trace_lanes > 0
+    lanes = _lane_runner(ctrls, cfg, edges, per_workload=False,
+                         telemetry=telemetry,
+                         trace_lanes=spec_.trace_lanes or None)
 
     def run(rates):
         rates = shd.constrain(jnp.asarray(rates, jnp.float32),
                               (None, "dp", None))
 
         def body(acc, chunk):
+            if telemetry:
+                acc_c, ct = lanes(chunk)
+                return jax.tree.map(jnp.add, acc, acc_c), ct
             return jax.tree.map(jnp.add, acc, lanes(chunk)), None
 
-        acc, _ = jax.lax.scan(body,
-                              _pooled_acc0(len(ctrls), spec_.bins), rates)
-        return acc
+        acc, ct = jax.lax.scan(body,
+                               _pooled_acc0(len(ctrls), spec_.bins), rates)
+        return (acc, ct) if telemetry else acc
 
     return jax.jit(run, donate_argnums=(0,) if donate else ())
 
@@ -176,6 +191,7 @@ class FleetResult(NamedTuple):
     pooled: EM.EpisodeMetrics    # [P] numpy, pooled over the whole fleet
     rei: ER.REIBreakdown         # [P] numpy
     meta: dict                   # wall_s, lane_minutes_per_sec, rss ...
+    trace: Any = None            # ControlTrace (numpy) if trace_lanes > 0
 
 
 def _peak_rss_mb() -> float:
@@ -198,7 +214,13 @@ def run_fleet(spec_: FleetSpec, *, classify=None, stream: bool = False,
     cfg = spec_.sim_config()
     edges = EM.response_edges(spec_.bins, cfg.resp_cap_sec)
     P = len(spec_.policies)
+    telemetry = spec_.trace_lanes > 0
+    if telemetry and stream:
+        raise ValueError("trace_lanes requires the one-dispatch mode; "
+                         "the streaming fold keeps only the donated "
+                         "accumulator (set stream=False)")
     t_build = time.perf_counter()
+    ct = None
     if stream:
         fold = make_chunk_folder(spec_, classify)
         acc = _pooled_acc0(P, spec_.bins)
@@ -216,7 +238,8 @@ def run_fleet(spec_: FleetSpec, *, classify=None, stream: bool = False,
         if warmup:          # np input: each call transfers a fresh copy
             jax.block_until_ready(run(rates))
         t0 = time.perf_counter()
-        acc = jax.block_until_ready(run(rates))
+        out = jax.block_until_ready(run(rates))
+        acc, ct = out if telemetry else (out, None)
         W, dispatches = spec_.n_workloads, 1
     wall = time.perf_counter() - t0
     pooled = jax.tree.map(np.asarray, EM.finalize(acc, edges))
@@ -234,4 +257,6 @@ def run_fleet(spec_: FleetSpec, *, classify=None, stream: bool = False,
         "n_devices": jax.device_count(),
         "mesh": (dict(shd.active().mesh.shape)
                  if shd.active() is not None else None)}
-    return FleetResult(spec_, pooled, rei_b, meta)
+    if ct is not None:
+        ct = jax.tree.map(np.asarray, ct)
+    return FleetResult(spec_, pooled, rei_b, meta, ct)

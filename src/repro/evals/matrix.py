@@ -153,7 +153,8 @@ def build_rates(spec_: MatrixSpec) -> np.ndarray:
 
 
 def _lane_runner(ctrls, cfg, edges, *, per_workload: bool = True,
-                 shard: bool = True):
+                 shard: bool = True, telemetry: bool = False,
+                 trace_lanes: int | None = None):
     """rates [W, M] -> MetricAccums of [P, W, ...] leaves: ONE blocked
     scan advances all P x W fused plant lanes with exactly one `decide`
     per controller per control step (`scaling.batch.make_batch_minute_
@@ -166,9 +167,16 @@ def _lane_runner(ctrls, cfg, edges, *, per_workload: bool = True,
     carry is O(P * bins) however large W grows — the fleet-scale mode.
     Under an active mesh the lane state and the per-workload accums are
     constrained over "dp"; the pooled accums are tiny and replicate (the
-    cross-shard reduction happens in the scatter/sum ops themselves)."""
+    cross-shard reduction happens in the scatter/sum ops themselves).
+
+    ``telemetry=True`` rides the in-scan decision trace out as scan ys
+    (NOT carry — the O(bins) carry bound holds at any fleet size) and
+    returns ``(accums, ControlTrace)``: decisions leaves [M, H, P, K],
+    minutes leaves [M, P, K], K = `trace_lanes` sampled lanes."""
     n_lanes = len(ctrls)
-    step = batch.make_batch_minute_step(ctrls, cfg, shard=shard)
+    step = batch.make_batch_minute_step(ctrls, cfg, shard=shard,
+                                        telemetry=telemetry,
+                                        trace_lanes=trace_lanes)
     if per_workload:
         fold = jax.vmap(jax.vmap(lambda a, m: EM.accum_update(a, m,
                                                               edges)))
@@ -184,24 +192,29 @@ def _lane_runner(ctrls, cfg, edges, *, per_workload: bool = True,
 
         def body(carry, rate_w):
             st, idx, acc = carry
-            st, m = step(st, idx, rate_w)
+            if telemetry:
+                st, (m, ct) = step(st, idx, rate_w)
+            else:
+                st, m = step(st, idx, rate_w)
+                ct = None
             acc = fold(acc, m)
             if shard and per_workload:
                 acc = jax.tree.map(
                     lambda a: shd.constrain(a, (None, "dp")), acc)
-            return (st, idx + 1, acc), None
+            return (st, idx + 1, acc), ct
 
-        (_, _, acc), _ = jax.lax.scan(
+        (_, _, acc), ct = jax.lax.scan(
             body,
             (batch.batch_initial_state(ctrls, W, cfg), jnp.int32(0), acc0),
             rates_w.T)
-        return acc
+        return (acc, ct) if telemetry else acc
     return lanes
 
 
 def make_runner(spec_: MatrixSpec, classify=None, *,
                 per_workload: bool = True, shard: bool = True,
-                donate: bool = False):
+                donate: bool = False, telemetry: bool = False,
+                trace_lanes: int | None = None):
     """jit: rates [S, Z, W, M] -> (pooled EpisodeMetrics [S, Z, F, P],
     per-workload EpisodeMetrics [S, Z, F, P, W]). One compile, one
     dispatch for the whole matrix. Under an active `repro.dist.sharding`
@@ -212,7 +225,13 @@ def make_runner(spec_: MatrixSpec, classify=None, *,
     scan (accum memory O(bins) per cell, independent of W) and returns
     ``(pooled, None)`` — the fleet-scale mode. ``donate=True`` donates
     the rates buffer to the call (fleet-sized inputs are not needed
-    again after dispatch)."""
+    again after dispatch).
+
+    ``telemetry=True`` also captures the in-scan decision trace (still
+    ONE compile — the `_cache_size()==1` pin holds) and returns a
+    3-tuple ``(pooled, per_workload, ControlTrace)`` with decisions
+    leaves [S, Z, M, H, F, P, K] and minutes leaves [S, Z, M, F, P, K]
+    (K = `trace_lanes` sampled workloads, all when None)."""
     cfg = spec_.sim_config()
     ctrls = controllers(spec_, classify)
     edges = EM.response_edges(spec_.bins, cfg.resp_cap_sec)
@@ -220,22 +239,35 @@ def make_runner(spec_: MatrixSpec, classify=None, *,
 
     over_seeds = jax.vmap(_lane_runner(ctrls, cfg, edges,
                                        per_workload=per_workload,
-                                       shard=shard))
+                                       shard=shard, telemetry=telemetry,
+                                       trace_lanes=trace_lanes))
     over_scenarios = jax.vmap(over_seeds)        # [S, Z, L(, W), ...]
+
+    def split_lanes(a, axis):
+        return a.reshape(a.shape[:axis] + (f_axis, p_axis)
+                         + a.shape[axis + 1:])
 
     def run_fn(rates):
         rates = jnp.asarray(rates, jnp.float32)
         if shard:
             rates = shd.constrain(rates, (None, None, "dp", None))
-        accs = over_scenarios(rates)
-        accs = jax.tree.map(
-            lambda a: a.reshape(a.shape[:2] + (f_axis, p_axis)
-                                + a.shape[3:]), accs)
+        out = over_scenarios(rates)
+        accs, ct = out if telemetry else (out, None)
+        accs = jax.tree.map(lambda a: split_lanes(a, 2), accs)
+        if telemetry:
+            # lane axis L -> (F, P): decisions [S, Z, M, H, L, K],
+            # minutes [S, Z, M, L, K]
+            ct = ct._replace(
+                decisions=jax.tree.map(lambda a: split_lanes(a, 4),
+                                       ct.decisions),
+                minutes=jax.tree.map(lambda a: split_lanes(a, 3),
+                                     ct.minutes))
         if not per_workload:
-            return EM.finalize(accs, edges), None
+            pool = EM.finalize(accs, edges)
+            return (pool, None, ct) if telemetry else (pool, None)
         per_w = EM.finalize(accs, edges)
         pool = EM.finalize(jax.tree.map(lambda a: a.sum(4), accs), edges)
-        return pool, per_w
+        return (pool, per_w, ct) if telemetry else (pool, per_w)
 
     return jax.jit(run_fn, donate_argnums=(0,) if donate else ())
 
@@ -244,7 +276,9 @@ def make_controller_evaluator(ctrls: Sequence,
                               cfg: SimConfig = SimConfig(), *,
                               bins: int = EM.DEFAULT_BINS,
                               per_workload: bool = True,
-                              shard: bool = True):
+                              shard: bool = True,
+                              telemetry: bool = False,
+                              trace_lanes: int | None = None):
     """Reusable jitted single-scenario evaluator for ad-hoc controllers
     (ablation variants, custom bands): rates [W, M] -> (pooled
     EpisodeMetrics [P], per-workload [P, W]). Keep the returned fn when
@@ -253,18 +287,25 @@ def make_controller_evaluator(ctrls: Sequence,
     ``per_workload=False`` never materializes the [P, W, bins] accum
     tensor — the W reduction streams inside the scan and the result is
     ``(pooled [P], None)``. Use it for fleet-sized W (the host-parity
-    tests at W >= 1e4 do)."""
+    tests at W >= 1e4 do).
+
+    ``telemetry=True`` appends the in-scan ControlTrace (decisions
+    leaves [M, H, P, K], minutes [M, P, K]) as a third element."""
     ctrls = list(ctrls)
     edges = EM.response_edges(bins, cfg.resp_cap_sec)
     lanes = _lane_runner(ctrls, cfg, edges, per_workload=per_workload,
-                         shard=shard)
+                         shard=shard, telemetry=telemetry,
+                         trace_lanes=trace_lanes)
 
     def run_fn(rates_w):
-        accs = lanes(rates_w)
+        out = lanes(rates_w)
+        accs, ct = out if telemetry else (out, None)
         if not per_workload:
-            return EM.finalize(accs, edges), None
-        return (EM.finalize(jax.tree.map(lambda a: a.sum(1), accs), edges),
-                EM.finalize(accs, edges))
+            pool = EM.finalize(accs, edges)
+            return (pool, None, ct) if telemetry else (pool, None)
+        pool = EM.finalize(jax.tree.map(lambda a: a.sum(1), accs), edges)
+        per_w = EM.finalize(accs, edges)
+        return (pool, per_w, ct) if telemetry else (pool, per_w)
 
     return jax.jit(run_fn)
 

@@ -1,0 +1,185 @@
+"""Content-addressed observability cards: traced runs you can point at.
+
+`capture_matrix` re-runs an evaluation matrix with telemetry on and
+publishes what the autoscaler *did* — not just how it scored — under
+``experiments/obs/<name>-<hash12>/`` using the same canonical-JSON
+sha256 + staged-atomic-publish scheme as the evals result cards:
+
+* ``card.json``    — key, axes, per-lane blame table, per-archetype
+  blame split, and the per-cause totals (their sum equals the pooled
+  violation total — pinned by tests/test_obs.py).
+* ``trace.npz``    — every ControlTrace array, decisions keyed
+  ``dec.<field>`` ([S, Z, M, H, F, P, K]) and minutes ``min.<field>``
+  ([S, Z, M, F, P, K]).
+* ``timeline.md``  — rendered decision timeline of the worst lane (most
+  violated requests), blame-annotated.
+
+The content key extends the matrix key with the obs schema version and
+`trace_lanes`, so an obs card never collides with a result card and a
+capture at different sampling is a different address. Telemetry rides
+the same compiled runner as the scored run (`matrix.make_runner` with
+``telemetry=True``), so the card's blame is attributed against exactly
+the decisions the evaluation executed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import shutil
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.aapaset.manifest import hash_json, publish_dir, stage_dir
+from repro.evals import matrix
+from repro.obs import attribute as AT
+from repro.obs.trace import ControlTrace, DecisionRecord, MinuteTrace, lane
+
+__all__ = ["OBS_SCHEMA", "DEFAULT_ROOT", "ObsCapture", "obs_key",
+           "capture_dir", "is_cached", "capture_matrix", "load_capture"]
+
+OBS_SCHEMA = 1
+DEFAULT_ROOT = pathlib.Path("experiments/obs")
+
+
+class ObsCapture(NamedTuple):
+    spec: matrix.MatrixSpec
+    trace: ControlTrace      # numpy leaves
+    blames: dict             # lane label -> Blame
+    card: dict
+    cached: bool
+
+
+def obs_key(spec_: matrix.MatrixSpec, classifier_id: str = "",
+            trace_lanes: int | None = None) -> dict:
+    return dict(spec_.content_key(), obs_schema=OBS_SCHEMA,
+                classifier=classifier_id or "default_classify",
+                trace_lanes=trace_lanes)
+
+
+def capture_dir(name: str, key: dict,
+                root: pathlib.Path | str = DEFAULT_ROOT) -> pathlib.Path:
+    return pathlib.Path(root) / f"{name}-{hash_json(key)}"
+
+
+def is_cached(name: str, key: dict,
+              root: pathlib.Path | str = DEFAULT_ROOT) -> bool:
+    return (capture_dir(name, key, root) / "card.json").exists()
+
+
+def _lane_labels(spec_: matrix.MatrixSpec, K: int):
+    """(label, (s, z), (f, p, k)) per traced lane, matrix-order."""
+    scs = spec_.scenario_names()
+    for s, sc in enumerate(scs):
+        for z, seed in enumerate(spec_.seeds):
+            for f, fc in enumerate(spec_.forecasters):
+                for p, pol in enumerate(spec_.policies):
+                    for k in range(K):
+                        label = f"{sc}/z{seed}/{pol}"
+                        if len(spec_.forecasters) > 1:
+                            label = f"{sc}/z{seed}/{pol}[{fc}]"
+                        yield f"{label}/w{k}", (s, z), (f, p, k)
+
+
+def _blame_all(spec_: matrix.MatrixSpec, ct: ControlTrace, cfg):
+    blames, arch_rows = {}, {}
+    K = ct.minutes.rate.shape[-1]
+    for label, pre, post in _lane_labels(spec_, K):
+        ln = lane(ct, pre, post)
+        b = AT.attribute(ln, cfg)
+        blames[label] = b
+        AT.archetype_counts(ln, b, into=arch_rows)
+    return blames, arch_rows
+
+
+def capture_matrix(spec_: matrix.MatrixSpec, classify=None, *,
+                   classifier_id: str = "",
+                   trace_lanes: int | None = None,
+                   root: pathlib.Path | str = DEFAULT_ROOT,
+                   force: bool = False) -> ObsCapture:
+    """The obs front door: traced matrix run -> published obs card."""
+    import jax
+
+    if classify is not None and not classifier_id:
+        raise ValueError("pass classifier_id= to content-address a "
+                         "capture with a custom classifier")
+    key = obs_key(spec_, classifier_id, trace_lanes)
+    if not force and is_cached(spec_.name, key, root):
+        return load_capture(spec_.name, key, root)
+
+    cfg = spec_.sim_config()
+    run = matrix.make_runner(spec_, classify, telemetry=True,
+                             trace_lanes=trace_lanes)
+    rates = matrix.build_rates(spec_)
+    _, _, ct = jax.block_until_ready(run(rates))
+    ct = jax.tree.map(np.asarray, ct)
+
+    blames, arch_rows = _blame_all(spec_, ct, cfg)
+    totals = {c: sum(b.counts[c] for b in blames.values())
+              for c in AT.CAUSES}
+    worst = max(blames, key=lambda lb: blames[lb].total)
+    wl = next((pre, post) for lb, pre, post
+              in _lane_labels(spec_, ct.minutes.rate.shape[-1])
+              if lb == worst)
+    worst_ln = lane(ct, *wl)
+    timeline = (f"# Decision timeline: {worst}\n\n"
+                + AT.timeline(worst_ln, blames[worst]))
+
+    card = {
+        "obs_schema": OBS_SCHEMA, "key": key, "hash": hash_json(key),
+        "spec": dataclasses.asdict(spec_),
+        "trace_lanes": trace_lanes,
+        "blame_totals": totals,
+        "violations_total": sum(totals.values()),
+        "worst_lane": worst,
+        "tables": {"blame": AT.blame_table(blames),
+                   "by_archetype": AT.archetype_table(arch_rows)},
+    }
+    out = capture_dir(spec_.name, key, root)
+    tmp = stage_dir(out)
+    np.savez_compressed(tmp / "trace.npz", **_trace_arrays(ct))
+    with open(tmp / "timeline.md", "w") as f:
+        f.write(timeline + "\n")
+    with open(tmp / "card.json", "w") as f:
+        json.dump(card, f, indent=1, default=float)
+    if force:
+        shutil.rmtree(out, ignore_errors=True)
+    publish_dir(tmp, out, "card.json")
+    return ObsCapture(spec_, ct, blames, card, False)
+
+
+def _trace_arrays(ct: ControlTrace) -> dict[str, np.ndarray]:
+    arrays = {}
+    for prefix, tree in (("dec", ct.decisions), ("min", ct.minutes)):
+        for field, arr in tree._asdict().items():
+            arrays[f"{prefix}.{field}"] = np.asarray(arr)
+    return arrays
+
+
+def load_capture(name: str, key: dict,
+                 root: pathlib.Path | str = DEFAULT_ROOT) -> ObsCapture:
+    out = capture_dir(name, key, root)
+    with open(out / "card.json") as f:
+        card = json.load(f)
+    with np.load(out / "trace.npz") as z:
+        fields = {k: z[k] for k in z.files}
+    ct = ControlTrace(
+        decisions=DecisionRecord(**{f: fields[f"dec.{f}"]
+                                    for f in DecisionRecord._fields}),
+        minutes=MinuteTrace(**{f: fields[f"min.{f}"]
+                               for f in MinuteTrace._fields}))
+    spec_ = _spec_from_card(card)
+    blames, _ = _blame_all(spec_, ct, spec_.sim_config())
+    return ObsCapture(spec_, ct, blames, card, True)
+
+
+def _spec_from_card(card: dict) -> matrix.MatrixSpec:
+    d = dict(card["spec"])
+    d["policies"] = tuple(d["policies"])
+    d["forecasters"] = tuple(d["forecasters"])
+    d["seeds"] = tuple(d["seeds"])
+    d["scenarios"] = tuple((n, tuple((k, v) for k, v in kw))
+                           for n, kw in d["scenarios"])
+    d["sim"] = tuple((k, v) for k, v in d["sim"])
+    return matrix.MatrixSpec(**d)

@@ -1,0 +1,174 @@
+"""Decision-telemetry schema: what a control decision looked like.
+
+One `DecisionRecord` per control-period head, captured *inside* the
+compiled simulation scan (``repro.sim.cluster`` single lane,
+``repro.scaling.batch`` fused P x W lanes) and — with the very same
+field meanings — appended eagerly by the live-engine adapter
+(``repro.scaling.adapter.EngineAutoscaler``), so a sim trace and an
+engine trace of the same policy are directly diffable.
+
+The schema is flat f32 on purpose: every field stacks into scan ys
+without reshaping, NaN marks "this policy has no such signal" (hpa has
+no forecast, only hybrid has a guard floor), and the NumPy post-hoc
+consumers (``repro.obs.attribute``, the obs cards) never need a sidecar
+describing which policy produced which lane.
+
+`ControlTrace` bundles the per-head decisions with the per-minute plant
+outcomes (arrivals, served, violated) of the same lane — everything the
+blame walk in ``repro.obs.attribute`` needs, self-contained.
+
+This module depends only on jax/numpy so the sim core and the scaling
+layer can import it without cycles; the heavier consumers live in
+``repro.obs.attribute`` / ``repro.obs.artifacts`` (lazy in the package
+``__init__``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class ExplainOut(NamedTuple):
+    """A controller's self-report of the signals behind one decision.
+    Produced by `Controller.explain` (optional hook, same (state, obs)
+    inputs as `decide` on the PRE-decide state); NaN where a policy has
+    no such signal."""
+    fc_point: jax.Array      # forecast point (arrivals/min, horizon peak)
+    fc_lo: jax.Array         # forecast interval bounds
+    fc_hi: jax.Array
+    confidence: jax.Array    # effective confidence fed to Algorithm 1
+    archetype: jax.Array     # f32 archetype id (0..3), NaN when untyped
+    guard_floor: jax.Array   # hybrid's reactive floor, NaN otherwise
+
+
+class DecisionRecord(NamedTuple):
+    """One control decision, fully accounted: observation -> controller
+    signals -> raw desired -> clip/cooldown outcome. All fields f32 and
+    broadcast to a common lane shape."""
+    minute: jax.Array          # global minute index of the decision
+    sec: jax.Array             # second-of-minute of the block head
+    ready: jax.Array           # ready replicas at the decision
+    total: jax.Array           # ready + starting (what desired compares to)
+    queue: jax.Array
+    util_ema: jax.Array
+    rate_rps: jax.Array        # arrival rate the controller saw
+    fc_point: jax.Array        # ExplainOut passthrough (NaN when absent)
+    fc_lo: jax.Array
+    fc_hi: jax.Array
+    confidence: jax.Array
+    archetype: jax.Array
+    guard_floor: jax.Array
+    desired_raw: jax.Array     # decide() output before the max_replicas clip
+    desired: jax.Array         # after the clip (what apply_decision saw)
+    target: jax.Array          # total + add - remove (what the plant got)
+    cooldown_req: jax.Array    # cooldown the controller requested (s)
+    cooldown_before: jax.Array # limiter cooldown remaining at the decision
+    scale_up: jax.Array        # 1.0 when the action fired
+    scale_down: jax.Array
+    cooldown_blocked: jax.Array  # wanted a scale-down, cooldown held it
+    capacity_capped: jax.Array   # desired_raw exceeded max_replicas
+
+
+class MinuteTrace(NamedTuple):
+    """Per-minute plant outcomes of the traced lane (the blame walk's
+    ground truth about what actually happened)."""
+    rate: jax.Array          # arrivals that minute
+    served: jax.Array
+    violated: jax.Array
+    queue_end: jax.Array
+    ready_mean: jax.Array
+
+
+class ControlTrace(NamedTuple):
+    """decisions: DecisionRecord leaves [..., M, H, ...lane axes];
+    minutes: MinuteTrace leaves [..., M, ...lane axes]. The exact axis
+    layout depends on the producer (see each simulate/runner docstring);
+    `lane()` below slices out one lane either way."""
+    decisions: DecisionRecord
+    minutes: MinuteTrace
+
+
+def explain_nan(shape: tuple = ()) -> ExplainOut:
+    """The no-signal ExplainOut for policies without an explain hook."""
+    nan = jnp.full(shape, jnp.nan, jnp.float32)
+    return ExplainOut(fc_point=nan, fc_lo=nan, fc_hi=nan, confidence=nan,
+                      archetype=nan, guard_floor=nan)
+
+
+def record(cfg, *, minute_idx, sec, ready, total, queue, util_ema,
+           rate_rps, exp: ExplainOut, desired_raw, desired, cooldown_req,
+           cooldown_before, act) -> DecisionRecord:
+    """Assemble one DecisionRecord from the decision-site values; every
+    field is cast to f32 and broadcast to `desired`'s lane shape."""
+    shape = jnp.shape(desired)
+
+    def f(x):
+        return jnp.broadcast_to(jnp.asarray(x, jnp.float32), shape)
+
+    return DecisionRecord(
+        minute=f(minute_idx), sec=f(sec), ready=f(ready), total=f(total),
+        queue=f(queue), util_ema=f(util_ema), rate_rps=f(rate_rps),
+        fc_point=f(exp.fc_point), fc_lo=f(exp.fc_lo), fc_hi=f(exp.fc_hi),
+        confidence=f(exp.confidence), archetype=f(exp.archetype),
+        guard_floor=f(exp.guard_floor),
+        desired_raw=f(desired_raw), desired=f(desired),
+        target=f(total + act.add - act.remove),
+        cooldown_req=f(cooldown_req), cooldown_before=f(cooldown_before),
+        scale_up=f(act.scale_up), scale_down=f(act.scale_down),
+        cooldown_blocked=f((desired < total - 0.5)
+                           & (cooldown_before > 0.0)),
+        capacity_capped=f(desired_raw > cfg.max_replicas))
+
+
+def head_schedule(cfg) -> list[int]:
+    """Seconds-of-minute of the control-period block heads — the H axis
+    of every in-scan trace, matching the blocked scan's schedule
+    (`sec % control_interval_sec == 0`)."""
+    ci = max(min(int(cfg.control_interval_sec), 60), 1)
+    n_full = 60 // ci
+    heads = [k * ci for k in range(n_full)]
+    if 60 - n_full * ci:
+        heads.append(n_full * ci)
+    return heads
+
+
+def sample_lanes(W: int, k: int | None) -> np.ndarray | None:
+    """Deterministic evenly-spaced lane sample: the static index set that
+    bounds fleet-scale capture to k of W lanes. None/k >= W keeps all."""
+    if k is None or k >= W:
+        return None
+    if k <= 0:
+        raise ValueError(f"trace_lanes must be positive, got {k}")
+    return np.unique(np.linspace(0, W - 1, k).round().astype(np.int64))
+
+
+def stack_records(records: list[DecisionRecord]) -> DecisionRecord:
+    """Host-side: a list of scalar DecisionRecords (the adapter's log)
+    -> one DecisionRecord of [N] numpy arrays."""
+    if not records:
+        return DecisionRecord(*(np.zeros((0,), np.float32)
+                                for _ in DecisionRecord._fields))
+    return DecisionRecord(*(
+        np.asarray([np.float32(getattr(r, f)) for r in records])
+        for f in DecisionRecord._fields))
+
+
+def to_numpy(ct: ControlTrace) -> ControlTrace:
+    return jax.tree.map(np.asarray, ct)
+
+
+def lane(ct: ControlTrace, pre: tuple = (), post: tuple = ()
+         ) -> ControlTrace:
+    """Slice one lane out of a batched ControlTrace: `pre` indexes the
+    axes BEFORE the time axes ([M, H] / [M]), `post` the lane axes after
+    them. E.g. matrix traces [S, Z, M, H, F, P, K] -> lane(ct, (s, z),
+    (f, p, k)); single-lane simulate traces need no indices at all."""
+    dec = jax.tree.map(
+        lambda a: np.asarray(a)[pre + (slice(None), slice(None)) + post],
+        ct.decisions)
+    mnt = jax.tree.map(
+        lambda a: np.asarray(a)[pre + (slice(None),) + post], ct.minutes)
+    return ControlTrace(decisions=dec, minutes=mnt)

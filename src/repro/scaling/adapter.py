@@ -17,6 +17,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
 from repro.scaling.api import Controller, Obs, apply_decision, limiter_init
 from repro.sim.cluster import SimConfig
 
@@ -65,6 +66,10 @@ class EngineAutoscaler:
         self._last_ctrl_t = 0.0
         self.last_desired = float(engine.ready_replicas)
         self.last_cooldown_s = 0.0     # logical seconds, last decide()
+        # one DecisionRecord per _control, same schema as the in-scan
+        # sim trace (repro.obs.trace), so engine runs are diffable
+        # against simulation runs of the same policy
+        self.decisions: list[obs_trace.DecisionRecord] = []
 
     @classmethod
     def from_policy(cls, engine, policy: str, *, classify=None,
@@ -131,31 +136,49 @@ class EngineAutoscaler:
     def _control(self, now: float) -> None:
         eng = self.engine
         obs = self._observe()
-        self.ctrl_state, desired, cool = self.controller.decide(
-            self.ctrl_state, obs)
-        desired = jnp.clip(desired, 0.0, self.cfg.max_replicas)
+        pre_state = self.ctrl_state
+        self.ctrl_state, desired_raw, cool = self.controller.decide(
+            pre_state, obs)
+        desired = jnp.clip(desired_raw, 0.0, self.cfg.max_replicas)
         total = jnp.float32(eng.ready_replicas + len(eng.starting))
         # cooldown decays by real elapsed time, in logical seconds
         dt_logical = (now - self._last_ctrl_t) / self._sec_per_logical
         self._last_ctrl_t = now
+        cooldown_before = self.lim.cooldown
         self.lim, act = apply_decision(
             self.lim, total, desired, cool, jnp.bool_(True),
             dt=float(dt_logical))
         target = float(total) + float(act.add) - float(act.remove)
         self.last_desired = float(desired)
         self.last_cooldown_s = float(cool)
+        exp = (self.controller.explain(pre_state, obs)
+               if getattr(self.controller, "explain", None) is not None
+               else obs_trace.explain_nan())
+        self.decisions.append(obs_trace.record(
+            self.cfg, minute_idx=self.minute_idx,
+            sec=now / self._sec_per_logical - 60.0 * self.minute_idx,
+            ready=obs.ready, total=total, queue=obs.queue,
+            util_ema=obs.util_ema, rate_rps=obs.rate_rps, exp=exp,
+            desired_raw=desired_raw, desired=desired, cooldown_req=cool,
+            cooldown_before=cooldown_before, act=act))
         eng.scale_to(int(round(target)))
+
+    def decision_trace(self) -> obs_trace.DecisionRecord:
+        """The decision log as one DecisionRecord of [N] numpy arrays."""
+        return obs_trace.stack_records(self.decisions)
 
 
 def run_autoscaled(engine, controller: Controller, *, submit_fn,
                    n_steps: int, cfg: SimConfig | None = None,
-                   minute_s: float = 60.0) -> dict:
+                   minute_s: float = 60.0
+                   ) -> tuple[dict, "obs_trace.DecisionRecord"]:
     """Convenience loop: `submit_fn(step_idx, engine)` enqueues arrivals,
     then the engine steps and the autoscaler reacts. Returns
-    `engine.summary()`."""
+    `(engine.summary(), decision trace)` — the trace is the stacked
+    [N]-array DecisionRecord log, so demos can print why they scaled."""
     auto = EngineAutoscaler(engine, controller, cfg, minute_s=minute_s)
     for i in range(n_steps):
         submit_fn(i, engine)
         engine.step()
         auto.on_tick()
-    return engine.summary()
+    return engine.summary(), auto.decision_trace()

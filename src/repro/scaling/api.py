@@ -46,6 +46,11 @@ class Controller(NamedTuple):
     # (ctrl_state, rate_history, minute_idx) -> ctrl_state
     decide: Callable[[Any, "Obs"], tuple[Any, jax.Array, jax.Array]]
     # (ctrl_state, obs) -> (ctrl_state, desired_replicas, cooldown_sec)
+    explain: Callable[[Any, "Obs"], Any] | None = None
+    # optional telemetry hook: (PRE-decide ctrl_state, obs) ->
+    # repro.obs.trace.ExplainOut — the forecast/confidence/guardrail
+    # signals behind the decision `decide` is about to make. Pure and
+    # jittable like decide; None means "no signals" (NaN-filled record).
 
 
 # ----------------------------------------------- cooldown / stabilization ----

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import sharding as shd
+from repro.obs import trace as obs_trace
 from repro.scaling import registry
 from repro.scaling.api import (Controller, LimiterState, Obs,
                                apply_decision)
@@ -113,12 +114,14 @@ def constrain_lanes(state: BatchState) -> BatchState:
 
 
 def _batch_ctrl_tick(cfg, ctrls, state: BatchState, acc, arr_w,
-                     minute_idx):
+                     minute_idx, telemetry: bool = False, head_sec=0.0):
     """Block-head tick for all lanes: fused plant flow on [P, W], then
     each controller's decide vmapped over ITS [W] row (P decide
     subgraphs total), then the shared scaling semantics back on [P, W].
     The plant pieces are cluster.py's own shape-agnostic helpers, so the
-    batched and single-lane dynamics cannot drift apart."""
+    batched and single-lane dynamics cannot drift apart. `telemetry`
+    (static) additionally returns a [P, W] DecisionRecord; the False
+    path is op-for-op the pre-telemetry program."""
     ready, pipeline, pipe_sum = _pop_pipeline(
         state.ready, state.pipeline, state.pipe_sum)
 
@@ -129,7 +132,7 @@ def _batch_ctrl_tick(cfg, ctrls, state: BatchState, acc, arr_w,
 
     W = arr_w.shape[0]
     total = ready + pipe_sum
-    new_ctrl, desired, cool_req = [], [], []
+    new_ctrl, desired, cool_req, exps = [], [], [], []
     for p, c in enumerate(ctrls):
         obs = Obs(ready_total=total[p], ready=ready[p],
                   util_ema=util_ema[p], queue=queue[p], rate_rps=arr_w,
@@ -141,12 +144,21 @@ def _batch_ctrl_tick(cfg, ctrls, state: BatchState, acc, arr_w,
         desired.append(jnp.asarray(des, jnp.float32))
         cool_req.append(jnp.broadcast_to(
             jnp.asarray(coo, jnp.float32), (W,)))
-    desired = jnp.clip(jnp.stack(desired), 0.0, cfg.max_replicas)
+        if telemetry:
+            exps.append(jax.vmap(
+                c.explain, in_axes=(0, Obs(0, 0, 0, 0, 0, 0, None)))(
+                    state.ctrl[p], obs)
+                if getattr(c, "explain", None) is not None
+                else obs_trace.explain_nan((W,)))
+    desired_raw = jnp.stack(desired)
+    desired = jnp.clip(desired_raw, 0.0, cfg.max_replicas)
     cool_req = jnp.stack(cool_req)
 
+    cooldown_before = state.cooldown
     lim, act = apply_decision(
         LimiterState(cooldown=state.cooldown, last_dir=state.last_dir),
         total, desired, cool_req, jnp.bool_(True), dt=1.0)
+    ready_at_decision = ready
     ready, pipeline, pipe_sum = _apply_scaling(ready, pipeline, pipe_sum,
                                                act)
 
@@ -159,7 +171,16 @@ def _batch_ctrl_tick(cfg, ctrls, state: BatchState, acc, arr_w,
                           util, act.scale_up.astype(jnp.float32),
                           act.scale_down.astype(jnp.float32),
                           act.oscillation, ready))
-    return state, acc
+    if not telemetry:
+        return state, acc
+    exp = jax.tree.map(lambda *xs: jnp.stack(xs), *exps)      # [P, W]
+    rec = obs_trace.record(
+        cfg, minute_idx=minute_idx, sec=head_sec,
+        ready=ready_at_decision, total=total, queue=queue,
+        util_ema=util_ema, rate_rps=arr_pw, exp=exp,
+        desired_raw=desired_raw, desired=desired, cooldown_req=cool_req,
+        cooldown_before=cooldown_before, act=act)
+    return state, acc, rec
 
 
 def _batch_plant_block(cfg, state: BatchState, acc, arr_pw, n_ticks: int):
@@ -178,7 +199,8 @@ def _batch_plant_block(cfg, state: BatchState, acc, arr_pw, n_ticks: int):
 
 def make_batch_minute_step(controllers: Sequence[Controller],
                            cfg: SimConfig = SimConfig(), *,
-                           shard: bool = True):
+                           shard: bool = True, telemetry: bool = False,
+                           trace_lanes: int | None = None):
     """(BatchState carry, minute_idx, rate_w [W]) stepping function for
     the fused P x W batch: returns per-minute MinuteOut of [P, W]
     arrays. `repro.evals.matrix` scans this directly with its metric
@@ -186,7 +208,15 @@ def make_batch_minute_step(controllers: Sequence[Controller],
     materialized [P, W, M] outputs. `decide` runs exactly once per
     controller per control step (O(P), not O(P^2)). With `shard` (the
     default) every carry field is constrained over the "dp" mesh axis
-    once per minute — a no-op without an active mesh."""
+    once per minute — a no-op without an active mesh.
+
+    With `telemetry` (static) each step returns ``(state, (MinuteOut
+    [P, W], ControlTrace))`` — decisions leaves [H, P, K], minutes
+    leaves [P, K], where H is the block-head count and K the traced
+    lane count: `trace_lanes` bounds capture to K deterministically
+    sampled lanes (``repro.obs.trace.sample_lanes``) so fleet-scale
+    scans stay O(P * bins) in the carry and O(K) in the trace ys. The
+    default path is untouched."""
     ctrls = list(controllers)
     P = len(ctrls)
     ci = max(min(int(cfg.control_interval_sec), 60), 1)
@@ -201,6 +231,10 @@ def make_batch_minute_step(controllers: Sequence[Controller],
         arr_w = rate_w / 60.0
         arr_pw = jnp.broadcast_to(arr_w, (P, W))
         acc = tuple(jnp.zeros((P, W), jnp.float32) for _ in _acc_init())
+
+        if telemetry:
+            return _step_telemetry(state, minute_idx, rate_w, arr_w,
+                                   arr_pw, acc, W)
 
         def block(st, a, n_ticks):
             st, a = _batch_ctrl_tick(cfg, ctrls, st, a, arr_w, minute_idx)
@@ -218,6 +252,50 @@ def make_batch_minute_step(controllers: Sequence[Controller],
         if tail:
             state, acc = block(state, acc, tail)
 
+        return _finish(state, minute_idx, rate_w, acc)
+
+    def _step_telemetry(state, minute_idx, rate_w, arr_w, arr_pw, acc, W):
+        idx = obs_trace.sample_lanes(W, trace_lanes)   # None keeps all
+
+        def block(st, a, n_ticks, head_sec):
+            st, a, rec = _batch_ctrl_tick(cfg, ctrls, st, a, arr_w,
+                                          minute_idx, telemetry=True,
+                                          head_sec=head_sec)
+            if n_ticks > 1:
+                st, a = _batch_plant_block(cfg, st, a, arr_pw, n_ticks - 1)
+            if idx is not None:
+                rec = jax.tree.map(lambda x: x[..., idx], rec)
+            return st, a, rec
+
+        recs = []
+        if n_full == 1:
+            state, acc, rec = block(state, acc, ci, jnp.float32(0.0))
+            recs.append(jax.tree.map(lambda x: x[None], rec))
+        elif n_full:
+            def body(carry, head_sec):
+                st, a, rec = block(*carry, ci, head_sec)
+                return (st, a), rec
+            (state, acc), rec = jax.lax.scan(
+                body, (state, acc),
+                jnp.arange(n_full, dtype=jnp.float32) * ci)
+            recs.append(rec)
+        if tail:
+            state, acc, rec = block(state, acc, tail,
+                                    jnp.float32(n_full * ci))
+            recs.append(jax.tree.map(lambda x: x[None], rec))
+        decisions = (recs[0] if len(recs) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *recs))  # [H, P, K]
+
+        state, m = _finish(state, minute_idx, rate_w, acc)
+        sel = (lambda a: a) if idx is None else (lambda a: a[..., idx])
+        mt = obs_trace.MinuteTrace(
+            rate=jnp.broadcast_to(sel(rate_w), sel(m.served).shape),
+            served=sel(m.served), violated=sel(m.violated),
+            queue_end=sel(m.queue_end), ready_mean=sel(m.ready_mean))
+        return state, (m, obs_trace.ControlTrace(decisions=decisions,
+                                                 minutes=mt))
+
+    def _finish(state, minute_idx, rate_w, acc):
         m = MinuteOut(
             served=acc[0], violated=acc[1], cold_starts=acc[2],
             replica_seconds=acc[3], queue_end=state.queue, resp_sum=acc[4],
@@ -240,7 +318,8 @@ def make_batch_simulator(controllers: Sequence[Controller],
                          cfg: SimConfig = SimConfig(), *,
                          plant_kernel: bool | None = None,
                          shard: bool = True, w_chunk: int | None = None,
-                         donate: bool = False):
+                         donate: bool = False, telemetry: bool = False,
+                         trace_lanes: int | None = None):
     """jit: rates [W, M] -> MinuteOut [P, W, M]. One compile, one
     dispatch: a single blocked scan over fused P x W plant lanes with
     exactly P (not P^2) decide evaluations per control step.
@@ -252,10 +331,21 @@ def make_batch_simulator(controllers: Sequence[Controller],
     dispatch, so the live plant state is [P, w_chunk] however large W
     grows (the chunks are independent episodes; requires
     W % w_chunk == 0). `donate` donates the rates buffer to the call.
+
+    `telemetry` returns ``(MinuteOut [P, W, M], ControlTrace)`` with the
+    trace time-major: decisions leaves [M, H, P, K], minutes leaves
+    [M, P, K] (K = `trace_lanes` sampled lanes, all W when None);
+    incompatible with `w_chunk` (the fleet front door
+    ``repro.evals.fleet`` owns chunked capture).
     """
     del plant_kernel
+    if telemetry and w_chunk is not None:
+        raise ValueError("telemetry does not compose with w_chunk here; "
+                         "use repro.evals.fleet for chunked capture")
     ctrls = list(controllers)
-    step = make_batch_minute_step(ctrls, cfg, shard=shard)
+    step = make_batch_minute_step(ctrls, cfg, shard=shard,
+                                  telemetry=telemetry,
+                                  trace_lanes=trace_lanes)
 
     def episode(rates):                       # [Wc, M] -> [P, Wc, M]
         W, M = rates.shape
@@ -268,6 +358,9 @@ def make_batch_simulator(controllers: Sequence[Controller],
         (_, _), out = jax.lax.scan(
             minute, (batch_initial_state(ctrls, W, cfg), jnp.int32(0)),
             rates.T)
+        if telemetry:
+            m, ct = out       # the trace stays time-major ([M, ...])
+            return jax.tree.map(lambda a: jnp.moveaxis(a, 0, -1), m), ct
         return jax.tree.map(lambda a: jnp.moveaxis(a, 0, -1), out)
 
     def run(rates):

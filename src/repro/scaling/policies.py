@@ -36,9 +36,14 @@ from repro.core.archetypes import table_iii_arrays
 from repro.forecast import api as fapi
 from repro.forecast import conformal as fconf
 from repro.forecast import registry as forecast_registry
+from repro.obs.trace import ExplainOut
 from repro.scaling.api import Controller, Obs
 
 EPSF = 1e-9
+
+
+def _nan() -> jax.Array:
+    return jnp.float32(jnp.nan)
 
 
 # ---------------------------------------------------------------- HPA ----
@@ -127,7 +132,13 @@ def predictive_controller(cfg, *, target: float = 0.70,
         desired = jnp.where(idle, 0.0, jnp.maximum(desired, 1.0))
         return state, desired, jnp.float32(cooldown_min * 60.0)
 
-    return Controller("predictive", init, on_minute, decide)
+    def explain(state: PredState, obs: Obs):
+        iv = fcst.forecast(state.fc, horizon_min)
+        return ExplainOut(fc_point=iv.point, fc_lo=iv.lo, fc_hi=iv.hi,
+                          confidence=_nan(), archetype=_nan(),
+                          guard_floor=_nan())
+
+    return Controller("predictive", init, on_minute, decide, explain)
 
 
 # ------------------------------------------------------------------ AAPA ----
@@ -223,7 +234,14 @@ def aapa_controller(
                               jnp.maximum(state.minrep_adj, 1.0))
         return state, desired, state.cool_adj_min * 60.0
 
-    return Controller("aapa", init, on_minute, decide)
+    def explain(state: AAPAState, obs: Obs):
+        iv = fcst.forecast(state.fc, horizon_min)
+        return ExplainOut(fc_point=iv.point, fc_lo=iv.lo, fc_hi=iv.hi,
+                          confidence=state.conf,
+                          archetype=state.arch.astype(jnp.float32),
+                          guard_floor=_nan())
+
+    return Controller("aapa", init, on_minute, decide, explain)
 
 
 # ------------------------------------------------------------------- KPA ----
@@ -329,4 +347,12 @@ def hybrid_controller(cfg, classify, *, guard_target: float = 0.85,
                             jnp.maximum(guarded, step_floor), guarded)
         return state, guarded, cool
 
-    return Controller("hybrid", base.init, base.on_minute, decide)
+    def explain(state, obs: Obs):
+        floor = jnp.ceil(obs.ready_total * obs.util_ema / guard_target)
+        floor = jnp.maximum(floor,
+                            jnp.ceil(obs.rate_rps
+                                     / (cfg.rps_per_replica
+                                        * guard_target)))
+        return base.explain(state, obs)._replace(guard_floor=floor)
+
+    return Controller("hybrid", base.init, base.on_minute, decide, explain)

@@ -62,6 +62,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
 from repro.scaling.api import (Controller, LimiterState, Obs,
                                apply_decision, limiter_init)
 
@@ -185,11 +186,15 @@ def _apply_scaling(ready, pipeline, pipe_sum, act):
 
 
 def _ctrl_tick(cfg: SimConfig, controller: Controller, state: SimState,
-               arrivals: jax.Array, minute_idx: jax.Array, do_ctrl):
+               arrivals: jax.Array, minute_idx: jax.Array, do_ctrl,
+               telemetry: bool = False, head_sec=0.0):
     """One 1-second step with a controller decision. `do_ctrl` is the
     Python literal True on block heads (the blocked path — the masking
     folds away) or a traced mask (the reference path, which evaluates
-    `decide` on every tick and discards the off-interval results)."""
+    `decide` on every tick and discards the off-interval results).
+    `telemetry` (static) additionally returns a DecisionRecord of this
+    decision — the True branch only ADDS read-only ops, so the False
+    path compiles to exactly the pre-telemetry program."""
     # 1. pods finishing startup
     ready, pipeline, pipe_sum = _pop_pipeline(
         state.ready, state.pipeline, state.pipe_sum)
@@ -209,11 +214,13 @@ def _ctrl_tick(cfg: SimConfig, controller: Controller, state: SimState,
         ctrl_state = jax.tree.map(
             lambda new, old: jnp.where(do_ctrl, new, old),
             ctrl_state, state.ctrl_state)
+    desired_raw = desired
     desired = jnp.clip(desired, 0.0, cfg.max_replicas)
 
     lim, act = apply_decision(state.lim, total, desired, cool_req,
                               jnp.bool_(True) if do_ctrl is True else
                               do_ctrl, dt=1.0)
+    ready_at_decision = ready
     ready, pipeline, pipe_sum = _apply_scaling(ready, pipeline, pipe_sum,
                                                act)
 
@@ -224,7 +231,17 @@ def _ctrl_tick(cfg: SimConfig, controller: Controller, state: SimState,
     out = (served, violated, cold, ready + pipe_sum, resp,
            util, act.scale_up.astype(jnp.float32),
            act.scale_down.astype(jnp.float32), act.oscillation, ready)
-    return new_state, out
+    if not telemetry:
+        return new_state, out
+    exp = (controller.explain(state.ctrl_state, obs)
+           if getattr(controller, "explain", None) is not None
+           else obs_trace.explain_nan())
+    rec = obs_trace.record(
+        cfg, minute_idx=minute_idx, sec=head_sec, ready=ready_at_decision,
+        total=total, queue=queue, util_ema=util_ema, rate_rps=arrivals,
+        exp=exp, desired_raw=desired_raw, desired=desired,
+        cooldown_req=cool_req, cooldown_before=state.lim.cooldown, act=act)
+    return new_state, out, rec
 
 
 # ------------------------------------------------- minute accumulation ----
@@ -425,9 +442,19 @@ def _plant_block(cfg: SimConfig, state: SimState, acc,
 
 
 def _block(cfg: SimConfig, controller: Controller, state: SimState, acc,
-           arrivals, minute_idx, n_ticks: int, use_kernel: bool):
+           arrivals, minute_idx, n_ticks: int, use_kernel: bool,
+           telemetry: bool = False, head_sec=0.0):
     """One control period: decide at the head tick, then `n_ticks - 1`
     plant-only ticks, all folded into the minute accumulator."""
+    if telemetry:
+        state, head, rec = _ctrl_tick(cfg, controller, state, arrivals,
+                                      minute_idx, True, telemetry=True,
+                                      head_sec=head_sec)
+        acc = _acc_fold(acc, head)
+        if n_ticks > 1:
+            state, acc = _plant_block(cfg, state, acc, arrivals,
+                                      n_ticks - 1, use_kernel)
+        return state, acc, rec
     state, head = _ctrl_tick(cfg, controller, state, arrivals, minute_idx,
                              True)
     acc = _acc_fold(acc, head)
@@ -437,9 +464,16 @@ def _block(cfg: SimConfig, controller: Controller, state: SimState, acc,
 
 
 def _minute_blocked(cfg: SimConfig, controller: Controller, carry,
-                    rate_this_min: jax.Array, use_kernel: bool = False):
+                    rate_this_min: jax.Array, use_kernel: bool = False,
+                    telemetry: bool = False):
     """One minute = ceil(60/ci) control-period blocks + the minute-
-    boundary controller hook. `decide` runs exactly once per block."""
+    boundary controller hook. `decide` runs exactly once per block.
+
+    With `telemetry` (static flag) the per-minute output becomes
+    ``(MinuteOut, ControlTrace)`` where the trace's decisions stack the
+    minute's H block-head DecisionRecords (H = #blocks, see
+    ``repro.obs.trace.head_schedule``); the default path is untouched
+    and compiles to the identical program."""
     state, minute_idx = carry
     arrivals_per_sec = rate_this_min / 60.0
     ci = max(min(int(cfg.control_interval_sec), 60), 1)
@@ -447,6 +481,41 @@ def _minute_blocked(cfg: SimConfig, controller: Controller, carry,
     tail = 60 - n_full * ci            # remainder block (0 if ci | 60)
 
     acc = _acc_init()
+
+    if telemetry:
+        recs = []
+
+        def block_body(carry, head_sec):
+            st, a = carry
+            st, a, rec = _block(cfg, controller, st, a, arrivals_per_sec,
+                                minute_idx, ci, use_kernel, telemetry=True,
+                                head_sec=head_sec)
+            return (st, a), rec
+
+        if n_full == 1:
+            (state, acc), rec = block_body((state, acc), jnp.float32(0.0))
+            recs.append(jax.tree.map(lambda x: x[None], rec))
+        elif n_full:
+            (state, acc), rec = jax.lax.scan(
+                block_body, (state, acc),
+                jnp.arange(n_full, dtype=jnp.float32) * ci)
+            recs.append(rec)
+        if tail:
+            state, acc, rec = _block(cfg, controller, state, acc,
+                                     arrivals_per_sec, minute_idx, tail,
+                                     use_kernel, telemetry=True,
+                                     head_sec=jnp.float32(n_full * ci))
+            recs.append(jax.tree.map(lambda x: x[None], rec))
+        decisions = (recs[0] if len(recs) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *recs))  # [H, ...]
+        carry2, m = _finish_minute(cfg, controller, state, minute_idx,
+                                   rate_this_min, acc)
+        mt = obs_trace.MinuteTrace(
+            rate=jnp.broadcast_to(rate_this_min, m.served.shape),
+            served=m.served, violated=m.violated, queue_end=m.queue_end,
+            ready_mean=m.ready_mean)
+        return carry2, (m, obs_trace.ControlTrace(decisions=decisions,
+                                                  minutes=mt))
 
     def block_body(carry, _):
         st, a = carry
@@ -539,16 +608,23 @@ minute_step_reference = _minute_reference
 
 def simulate(rates_per_min: jax.Array, controller: Controller,
              cfg: SimConfig = SimConfig(), *,
-             plant_kernel: bool | None = None) -> MinuteOut:
+             plant_kernel: bool | None = None,
+             telemetry: bool = False) -> MinuteOut:
     """Simulate one workload. rates_per_min [M] -> MinuteOut of [M] arrays.
 
     Control-period-blocked: `decide` runs once per control interval
     (bit-exact with `simulate_reference`, which evaluates it every tick).
     `plant_kernel=None` auto-selects the fused Pallas plant kernel on TPU.
+
+    `telemetry=True` (static) additionally captures the in-scan decision
+    trace and returns ``(MinuteOut, ControlTrace)`` with decisions
+    leaves [M, H] (H block heads per minute) and minutes leaves [M];
+    the default path compiles to the identical pre-telemetry program.
     """
     use_kernel = _use_plant_kernel(plant_kernel)
     (state, _), out = jax.lax.scan(
-        partial(_minute_blocked, cfg, controller, use_kernel=use_kernel),
+        partial(_minute_blocked, cfg, controller, use_kernel=use_kernel,
+                telemetry=telemetry),
         (initial_state(controller, cfg), jnp.int32(0)),
         rates_per_min.astype(jnp.float32))
     return out
@@ -568,7 +644,8 @@ def simulate_reference(rates_per_min: jax.Array, controller: Controller,
 
 def make_simulator(controller: Controller, cfg: SimConfig = SimConfig(), *,
                    plant_kernel: bool | None = None,
-                   w_chunk: int | None = None, donate: bool = False):
+                   w_chunk: int | None = None, donate: bool = False,
+                   telemetry: bool = False):
     """jit(vmap(simulate)): rates [W, M] -> MinuteOut of [W, M] arrays.
 
     Fleet knobs (mirroring `repro.scaling.batch.make_batch_simulator`):
@@ -576,9 +653,12 @@ def make_simulator(controller: Controller, cfg: SimConfig = SimConfig(), *,
     dispatch so live plant state is [w_chunk] however large W grows
     (chunks are independent episodes; requires W % w_chunk == 0);
     `donate` donates the rates buffer to the call, so a fleet-sized
-    input tensor never double-buffers against the outputs."""
+    input tensor never double-buffers against the outputs. `telemetry`
+    returns ``(MinuteOut [W, M], ControlTrace)`` with decisions leaves
+    [W, M, H] and minutes leaves [W, M]."""
     fn = jax.vmap(lambda r: simulate(r, controller, cfg,
-                                     plant_kernel=plant_kernel))
+                                     plant_kernel=plant_kernel,
+                                     telemetry=telemetry))
 
     def run(rates):
         W, M = rates.shape

@@ -1,8 +1,9 @@
-"""Render §Eval-cards / §Tuning-cards / §Dry-run-summary /
-§Roofline-summary markdown tables from the experiment JSONs and the
-content-addressed `repro.evals` / `repro.tuning` result cards, and
-append them to EXPERIMENTS.md (replacing everything after the AUTOGEN
-marker)."""
+"""Render §Eval-cards / §Obs-cards / §Tuning-cards / §Bench-trajectory /
+§Dry-run-summary / §Roofline-summary markdown tables from the experiment
+JSONs, the content-addressed `repro.evals` / `repro.obs` /
+`repro.tuning` result cards, and the committed BENCH_*.json perf
+trajectories, and append them to EXPERIMENTS.md (replacing everything
+after the AUTOGEN marker)."""
 import json
 import pathlib
 
@@ -40,6 +41,59 @@ def evals_tables():
             keys = ", ".join(f"{k}={v}" for k, v in sorted(payload.items())
                              if isinstance(v, (int, float, str)))
             lines.append(f"\n### {name}\n\n{keys or '(payload in card)'}\n")
+    return "\n".join(lines)
+
+
+def obs_tables():
+    """One section per `repro.obs` capture card under experiments/obs:
+    the blame table (per-cause SLO-violation attribution per traced
+    lane), the per-archetype split, and a pointer to the decision
+    timeline, each addressed by its content hash."""
+    root = ROOT / "experiments/obs"
+    cards = sorted(root.glob("*/card.json")) if root.exists() else []
+    lines = ["\n## §Obs-cards (content-addressed `repro.obs` captures)\n"]
+    if not cards:
+        lines.append("(no obs cards yet — run "
+                     "`repro.obs.artifacts.capture_matrix`)")
+        return "\n".join(lines)
+    for path in cards:
+        card = json.loads(path.read_text())
+        name = path.parent.name
+        totals = card.get("blame_totals", {})
+        top = ", ".join(f"{k}={v:.0f}" for k, v in
+                        sorted(totals.items(), key=lambda kv: -kv[1])
+                        if v > 0) or "no violations"
+        lines.append(f"\n### {name}\n\nblame totals: {top}; worst lane "
+                     f"`{card.get('worst_lane')}` (timeline: "
+                     f"`{path.parent.relative_to(ROOT)}/timeline.md`)\n")
+        for title, table in card.get("tables", {}).items():
+            lines.append(f"\n**{title}**\n\n{table}\n")
+    return "\n".join(lines)
+
+
+def bench_trajectory():
+    """One table per committed BENCH_*.json: the measured perf
+    trajectory each optimization PR pinned (µs/call per bench record)."""
+    benches = sorted(ROOT.glob("BENCH_*.json"))
+    lines = ["\n## §Bench-trajectory (committed BENCH_*.json)\n"]
+    if not benches:
+        lines.append("(no committed bench trajectories)")
+        return "\n".join(lines)
+    for path in benches:
+        b = json.loads(path.read_text())
+        recs = b.get("records", [])
+        lines += [f"\n### {path.name} (`{b.get('bench', '?')}`, "
+                  f"{b.get('elapsed_s', 0):.0f}s"
+                  + (", smoke" if b.get("smoke") else "") + ")\n",
+                  "| record | µs/call | derived |", "|---|---|---|"]
+        for r in recs:
+            d = r.get("derived") or {}
+            derived = (d if isinstance(d, str) else ", ".join(
+                f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in sorted(d.items())))
+            us = r.get("us_per_call")
+            us = "-" if us is None else f"{us:,.1f}"
+            lines.append(f"| {r['name']} | {us} | {derived or '-'} |")
     return "\n".join(lines)
 
 
@@ -143,7 +197,8 @@ def main():
     p = ROOT / "EXPERIMENTS.md"
     text = p.read_text() if p.exists() else f"# Experiments\n\n{MARKER}\n"
     head = text.split(MARKER)[0] + MARKER + "\n"
-    p.write_text(head + evals_tables() + "\n" + tuning_tables() + "\n"
+    p.write_text(head + evals_tables() + "\n" + obs_tables() + "\n"
+                 + tuning_tables() + "\n" + bench_trajectory() + "\n"
                  + dryrun_table() + "\n" + roofline_table() + "\n")
     print("EXPERIMENTS.md updated")
 
