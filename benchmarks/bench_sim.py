@@ -15,6 +15,12 @@ Four measurements, all in simulated workload-minutes per wall-second:
 * `sim_kernel`   — the fused Pallas plant kernel vs its jnp oracle on a
   lane tile. On CPU the kernel runs in INTERPRET mode (a correctness
   vehicle, not a speed claim — the TPU number is the real one).
+* `sim_fused_decide` — the kernel-path trajectory per policy: the
+  whole-episode fused-decide kernel (`decide` inside the Pallas plant
+  kernel) vs the block-head-return blocked scan vs the tick-level
+  reference. Interpret mode on CPU, same caveat as `sim_kernel`.
+* `sim_gbdt_kernel` — the vectorized GBDT node-table kernel lanes/sec
+  vs the host table path on a small synthetic fit.
 
 `python -m benchmarks.run sim --json .` writes the records to
 BENCH_sim.json (stable schema) so perf regressions diff across PRs.
@@ -274,6 +280,64 @@ def main(smoke: bool = False):
                   "number is the real speed claim",
           "kernel_us": tk, "ref_us": tr, "ref_over_kernel": tr / tk}
     common.emit("sim_kernel", tk, f"interpret_ref_ratio={tr/tk:.2f}", kp)
+
+    # ---- fused-decide episode kernel trajectory, per policy ------------
+    # ci=30 keeps the unrolled-tick jaxpr small enough that the interpret
+    # kernel compiles in seconds per policy (the TPU path is agnostic).
+    dk_cfg = SimConfig(control_interval_sec=30)
+    dk_names = ("hpa",) if smoke else tuple(registry.available())
+    dk_M = 24 if smoke else 60
+    dk_rates = rates[:, :dk_M]
+    dk = {"workloads": W, "minutes": dk_M, "interpret_mode": True,
+          "control_interval_sec": dk_cfg.control_interval_sec,
+          "note": "CPU interpret mode validates the fused-decide episode "
+                  "kernel; the TPU number is the real speed claim",
+          "policies": {}}
+    for name in dk_names:
+        ctrl = registry.get_controller(name, dk_cfg)
+        t = _interleaved({
+            "fused_decide": jax.jit(
+                lambda r, c=ctrl: kops.episode_block(r, c, dk_cfg)),
+            "block_head": jax.jit(jax.vmap(
+                lambda r, c=ctrl: simulate(r, c, dk_cfg,
+                                           decide_kernel=False))),
+            "reference": jax.jit(jax.vmap(
+                lambda r, c=ctrl: simulate_reference(r, c, dk_cfg))),
+        }, dk_rates, iters)
+        dk["policies"][name] = {
+            "minutes_per_sec": {k: W * dk_M / v for k, v in t.items()},
+            "fused_over_block_head": t["block_head"] / t["fused_decide"]}
+    lead = "aapa" if "aapa" in dk["policies"] else dk_names[0]
+    lead_mps = dk["policies"][lead]["minutes_per_sec"]["fused_decide"]
+    common.emit(
+        "sim_fused_decide", 1e6 / lead_mps,
+        f"{lead}_interpret_fused_vs_blocked="
+        f"{dk['policies'][lead]['fused_over_block_head']:.3f}x", dk)
+
+    # ---- GBDT node-table kernel lanes/sec ------------------------------
+    from repro.core import gbdt
+    Ng = 256 if smoke else 4096
+    Fg = 38
+    Xs = rng.normal(size=(512, Fg)).astype(np.float32)
+    ys = rng.integers(0, 4, 512).astype(np.int32)
+    params = gbdt.fit(Xs, ys,
+                      gbdt.GBDTConfig(n_rounds=8 if smoke else 20))
+    Xq = jnp.asarray(rng.normal(size=(Ng, Fg)).astype(np.float32))
+    host_tables = jax.jit(gbdt.predict_logits)
+    tgk = common.timeit(lambda: jax.block_until_ready(
+        kops.gbdt_logits(params, Xq, interpret=True)),
+        warmup=1, iters=iters)
+    tgr = common.timeit(lambda: jax.block_until_ready(
+        host_tables(params, Xq)), warmup=1, iters=iters)
+    gk = {"rows": Ng, "features": Fg, "rounds": int(params.feat.shape[0]),
+          "depth": int(params.depth), "interpret_mode": True,
+          "kernel_us": tgk, "host_table_us": tgr,
+          "kernel_lanes_per_sec": Ng / (tgk / 1e6),
+          "note": "CPU interpret mode validates the node-table kernel "
+                  "(bit-exact vs the host table path); the TPU number "
+                  "is the real speed claim"}
+    common.emit("sim_gbdt_kernel", tgk,
+                f"lanes_per_sec={Ng / (tgk / 1e6):,.0f}", gk)
 
 
 if __name__ == "__main__":

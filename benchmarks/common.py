@@ -73,9 +73,18 @@ def emit(name: str, us_per_call: float, derived: str, payload=None):
 
 
 def timeit(fn, *, warmup=1, iters=3):
+    """us per call: warmup (compile) discarded, then the MEDIAN of
+    `iters` individually-clocked calls — one GC pause or noisy
+    neighbor skews a mean, the median shrugs it off."""
     for _ in range(warmup):
         fn()
-    t0 = time.time()
-    for _ in range(iters):
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
         fn()
-    return (time.time() - t0) / iters * 1e6  # us
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    n = len(samples)
+    mid = samples[n // 2] if n % 2 else (samples[n // 2 - 1]
+                                         + samples[n // 2]) / 2
+    return mid * 1e6  # us

@@ -6,18 +6,135 @@ level-order trees, class weights inversely proportional to frequency.
 
 Everything is fixed-shape and jittable: the per-round tree build uses
 segment-sum histograms over (node, feature, bin), vectorized split search,
-and level-order node propagation. Prediction is a lax.scan over rounds.
+and level-order node propagation.
+
+Prediction traverses flattened *node tables*: at fit/load time the
+[rounds, K, ...] level-order trees are reshaped once into contiguous
+(feature, threshold, leaf) tables over a single round-major tree axis
+(``NodeTables``), and ``predict_logits`` descends all N rows x T trees
+in lockstep — one static-pattern column gather evaluates every
+(tree, node) split comparison at once, then the level walk is pure
+vector selects (``_descend``), no per-row dynamic gathers and no scan
+over rounds. That is the identical layout and math the Pallas kernel in
+``repro.kernels.gbdt_tables`` streams through VMEM (bit-exact by
+construction); the host path additionally cache-blocks the tree axis
+(``traverse_tables_chunked``, bit-identical — trees are independent).
+The retained per-round scan (``predict_logits_scan``) is the parity
+oracle; the two differ only in logit summation order (reshape-sum vs
+sequential scan), so parity is bit-close, not bit-exact.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 EPS = 1e-12
+
+
+class NodeTables(NamedTuple):
+    """Level-order trees flattened over one round-major tree axis
+    (T = rounds * K, tree t = round * K + class). Internal nodes are
+    heap-indexed per level (node n at depth d lives at 2^d - 1 + n), so
+    every (tree, node) split comparison evaluates in one shot and
+    descending a level is a short select chain per (row, tree) pair."""
+    feat: jax.Array    # [T, 2^depth - 1] int32 split feature ids
+    thresh: jax.Array  # [T, 2^depth - 1] int32 split bins (right if >)
+    leaf: jax.Array    # [T, 2^depth] f32 leaf values (lr folded in)
+
+
+def node_tables(feat: jax.Array, thresh: jax.Array,
+                leaf: jax.Array) -> NodeTables:
+    """[rounds, K, ...] level-order trees -> contiguous NodeTables."""
+    R, K, I = feat.shape
+    L = leaf.shape[-1]
+    return NodeTables(
+        feat=jnp.asarray(feat, jnp.int32).reshape(R * K, I),
+        thresh=jnp.asarray(thresh, jnp.int32).reshape(R * K, I),
+        leaf=jnp.asarray(leaf, jnp.float32).reshape(R * K, L))
+
+
+def _descend(bits: jax.Array, leaf: jax.Array) -> jax.Array:
+    """bits [N, T, I] per-node go-right decisions, leaf [T, L] ->
+    per-tree leaf values [N, T]. The walk is pure vector selects: at
+    depth d the live node id picks this level's decision bit through a
+    <= 2^d-way `jnp.where` chain — no lane-dynamic gather, which is
+    exactly the form the Pallas node-table kernel vectorizes."""
+    N, T, I = bits.shape
+    L = leaf.shape[-1]
+    depth = max(int(L).bit_length() - 1, 0)
+    node = jnp.zeros((N, T), jnp.int32)
+    for d in range(depth):
+        base = (1 << d) - 1
+        b = bits[:, :, base]
+        for n in range(1, 1 << d):
+            b = jnp.where(node == n, bits[:, :, base + n], b)
+        node = node * 2 + b.astype(jnp.int32)
+    return leaf[jnp.arange(T, dtype=jnp.int32)[None, :], node]
+
+
+def traverse_tables(tables: NodeTables, xb: jax.Array) -> jax.Array:
+    """Descend all trees for all rows: xb [N, F] int32 bins ->
+    per-tree leaf values [N, T]. One static-pattern column gather
+    evaluates every (tree, node) split comparison at once
+    (`jnp.take(xb, feat.reshape(-1), axis=1)` — the index vector is
+    shared by all rows, so XLA lowers it as a column permutation, not a
+    per-row gather), then `_descend` walks the levels with vector
+    selects. This lockstep form is what the kernel executes verbatim."""
+    N = xb.shape[0]
+    T, I = tables.feat.shape
+    xv = jnp.take(xb, tables.feat.reshape(-1), axis=1)   # [N, T*I]
+    bits = (xv > tables.thresh.reshape(-1)[None, :]).reshape(N, T, I)
+    return _descend(bits, tables.leaf)
+
+
+def traverse_tables_chunked(tables: NodeTables, xb: jax.Array,
+                            tree_chunk: int | None = None) -> jax.Array:
+    """`traverse_tables`, bit-identical, but `lax.scan`ned over chunks
+    of the tree axis so the [N, tree_chunk * I] comparison plane stays
+    cache-resident on CPU — the host path at large N (trees are
+    independent, so chunking only reorders which tree is evaluated
+    when, never any float op). `tree_chunk=None` picks the largest
+    divisor of T that is <= 32."""
+    N = xb.shape[0]
+    T, I = tables.feat.shape
+    L = tables.leaf.shape[-1]
+    if tree_chunk is None:
+        tree_chunk = next(tc for tc in range(min(T, 32), 0, -1)
+                          if T % tc == 0)
+    if tree_chunk >= T:
+        return traverse_tables(tables, xb)
+    tc = tree_chunk
+    chunked = (tables.feat.reshape(T // tc, tc, I),
+               tables.thresh.reshape(T // tc, tc, I),
+               tables.leaf.reshape(T // tc, tc, L))
+
+    def chunk(_, tabs):
+        f, t, lv = tabs
+        xv = jnp.take(xb, f.reshape(-1), axis=1)         # [N, tc*I]
+        bits = (xv > t.reshape(-1)[None, :]).reshape(N, tc, I)
+        return _, _descend(bits, lv)
+
+    _, vals = jax.lax.scan(chunk, None, chunked)         # [C, N, tc]
+    return jnp.moveaxis(vals, 0, 1).reshape(N, T)
+
+
+def table_logits(base: jax.Array, tables: NodeTables, xb: jax.Array,
+                 *, chunked: bool = False) -> jax.Array:
+    """binned xb [N, F] -> logits [N, K] via the node tables
+    (`chunked=True` takes the cache-blocked host traversal; both
+    traversals are bit-identical). The per-class sum reassociates vs
+    the round scan (reshape-sum), hence bit-close — not bit-exact —
+    parity with `predict_logits_scan`."""
+    trav = traverse_tables_chunked if chunked else traverse_tables
+    vals = trav(tables, xb)                             # [N, T]
+    K = base.shape[0]
+    N, T = vals.shape
+    return base + vals.reshape(N, T // K, K).sum(axis=1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +158,11 @@ class GBDTParams:
     leaf:        [rounds, K, 2^depth] leaf values (learning rate folded in).
     bin_edges:   [F, n_bins - 1] quantile bin edges.
     base:        [K] initial logits (log priors).
+    tables:      flattened NodeTables over the round-major tree axis —
+                 derived from feat/thresh/leaf exactly once at
+                 construction (fit / load / npz restore all route through
+                 here), so neither the host `predict_logits` nor the
+                 Pallas kernel pays the reshape per call.
     """
 
     feat: jax.Array
@@ -48,6 +170,11 @@ class GBDTParams:
     leaf: jax.Array
     bin_edges: jax.Array
     base: jax.Array
+    tables: NodeTables | None = None
+
+    def __post_init__(self):
+        if self.tables is None:
+            self.tables = node_tables(self.feat, self.thresh, self.leaf)
 
     @property
     def depth(self) -> int:
@@ -55,7 +182,7 @@ class GBDTParams:
 
     def tree_flatten(self):
         return ((self.feat, self.thresh, self.leaf, self.bin_edges,
-                 self.base), None)
+                 self.base, self.tables), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -193,7 +320,19 @@ def fit(X: np.ndarray, y: np.ndarray, cfg: GBDTConfig = GBDTConfig(),
 
 @jax.jit
 def predict_logits(params: GBDTParams, X: jax.Array) -> jax.Array:
-    """X [N, F] -> logits [N, K]."""
+    """X [N, F] -> logits [N, K] via the flattened node tables (all rows
+    x trees descend level-order in lockstep; no scan over rounds)."""
+    xb = bin_features(X.astype(jnp.float32), params.bin_edges)
+    tables = (params.tables if params.tables is not None
+              else node_tables(params.feat, params.thresh, params.leaf))
+    return table_logits(params.base, tables, xb, chunked=True)
+
+
+@jax.jit
+def predict_logits_scan(params: GBDTParams, X: jax.Array) -> jax.Array:
+    """The retained per-round scan (one `apply_tree` walk per round):
+    the parity oracle for the table path and the kernel, and the host
+    baseline bench_classification measures the table speedup against."""
     xb = bin_features(X.astype(jnp.float32), params.bin_edges)
     N = X.shape[0]
     depth = params.depth

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: vectorized GBDT node-table inference.
+
+The AAPA classifier is a gradient-boosted ensemble whose trees
+``repro.core.gbdt`` flattens at fit/load time into contiguous
+(feature, threshold, leaf) node tables over one round-major tree axis
+(``gbdt.NodeTables``). That layout makes inference a handful of gathered
+vector ops — descend every (row, tree) pair one level per step — which
+is exactly the shape this kernel executes over a VMEM tile of rows:
+
+* grid step = one ``TILE_N`` tile of rows; X streams in per tile while
+  the node tables (tens of KB for the paper-size ensemble) sit in VMEM
+  as full blocks shared by every step;
+* binning happens in-kernel as a comparison count
+  ``sum(edges <= x)`` — integer-identical to the host path's
+  ``searchsorted(side="right")`` since both count edges <= value with
+  exact float compares;
+* the traversal and the per-class logit reduction are literally
+  ``gbdt.traverse_tables`` / ``gbdt.table_logits``, so the kernel and
+  the host table path cannot drift apart.
+
+Oracle: ``repro.core.gbdt.predict_logits`` (the host table path), which
+is itself property-tested bit-close against the retained per-round scan
+``predict_logits_scan``. Parity lives in tests/test_kernel_smoke.py
+(deterministic tier-1) and tests/test_kernel_properties.py (random
+shapes including non-multiple-of-tile row counts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gbdt import NodeTables, table_logits
+
+
+def _kernel(x_ref, edges_ref, feat_ref, thresh_ref, leaf_ref, base_ref,
+            out_ref):
+    """x_ref (TILE_N, F); edges (F, B-1); feat/thresh (T, 2^d - 1);
+    leaf (T, 2^d); base (1, K); out (TILE_N, K)."""
+    x = x_ref[:]
+    edges = edges_ref[:]
+    # bin = #edges <= x, the exact integer searchsorted(side="right")
+    xb = jnp.sum((edges[None, :, :] <= x[:, :, None]).astype(jnp.int32),
+                 axis=-1)                                # (TILE_N, F)
+    tables = NodeTables(feat=feat_ref[:], thresh=thresh_ref[:],
+                        leaf=leaf_ref[:])
+    out_ref[:] = table_logits(base_ref[0], tables, xb)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def gbdt_logits_kernel(X: jax.Array, bin_edges: jax.Array,
+                       feat: jax.Array, thresh: jax.Array,
+                       leaf: jax.Array, base: jax.Array, *,
+                       tile_n: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """X [N, F] raw features + NodeTables arrays -> logits [N, K].
+
+    `feat`/`thresh` [T, 2^depth - 1] int32 and `leaf` [T, 2^depth] f32
+    are the flattened tables from ``gbdt.node_tables`` (round-major tree
+    axis); `bin_edges` [F, n_bins - 1]; `base` [K] initial logits."""
+    N, F = X.shape
+    K = base.shape[0]
+    n_tiles = max((N + tile_n - 1) // tile_n, 1)
+    pad_n = n_tiles * tile_n
+    x = jnp.zeros((pad_n, F), jnp.float32).at[:N].set(
+        X.astype(jnp.float32))
+
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)  # noqa: E731
+    edges = jnp.asarray(bin_edges, jnp.float32)
+    feat = jnp.asarray(feat, jnp.int32)
+    thresh = jnp.asarray(thresh, jnp.int32)
+    leaf = jnp.asarray(leaf, jnp.float32)
+    base2 = jnp.asarray(base, jnp.float32)[None, :]      # (1, K)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_n, F), lambda i: (i, 0)),
+                  full(edges), full(feat), full(thresh), full(leaf),
+                  full(base2)],
+        out_specs=pl.BlockSpec((tile_n, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pad_n, K), jnp.float32),
+        interpret=interpret,
+    )(x, edges, feat, thresh, leaf, base2)
+    return out[:N]

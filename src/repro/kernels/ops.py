@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.features import freq_features
+from repro.kernels.episode_block import episode_minutes
+from repro.kernels.gbdt_tables import gbdt_logits_kernel
 from repro.kernels.holt_winters import holt_winters_kernel
 from repro.kernels.plant_block import plant_block_kernel
 from repro.kernels.window_features import window_features_kernel
@@ -65,3 +67,29 @@ def plant_tick_block(ready, pipeline, queue, wait_sum, util_ema, cooldown,
         service_sec=service_sec, slo_sec=slo_sec,
         resp_cap_sec=resp_cap_sec, metric_tau_sec=metric_tau_sec,
         tile_b=tile_b, interpret=interpret)
+
+
+def episode_block(rates, controller, cfg, *, tile_b: int = 8,
+                  interpret: bool | None = None):
+    """Whole episodes fused on-chip: rates [B, M] -> MinuteOut of [B, M]
+    with plant ticks AND `controller.decide` inside one Pallas kernel
+    (``repro.kernels.episode_block``). Oracle: the CPU blocked scan
+    ``repro.sim.cluster.simulate`` per lane."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return episode_minutes(controller, cfg, rates, tile_b=tile_b,
+                           interpret=interpret)
+
+
+def gbdt_logits(params, X, *, tile_n: int = 128,
+                interpret: bool | None = None):
+    """GBDT logits [N, K] from raw features X [N, F] via the node-table
+    kernel (``repro.kernels.gbdt_tables``); `params` is a trained
+    ``repro.core.gbdt.GBDTParams``. Oracle: ``gbdt.predict_logits``
+    (the host path over the same flattened tables)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    t = params.tables
+    return gbdt_logits_kernel(X, params.bin_edges, t.feat, t.thresh,
+                              t.leaf, params.base, tile_n=tile_n,
+                              interpret=interpret)

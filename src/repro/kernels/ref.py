@@ -38,3 +38,21 @@ def plant_block_ref(ready, pipeline, queue, wait_sum, util_ema, cooldown,
                     metric_tau_sec=metric_tau_sec)
     return _ref(cfg, ready, pipeline, queue, wait_sum, util_ema, cooldown,
                 pipe_sum, arrivals, n_ticks=n_ticks)
+
+
+def episode_block_ref(rates, controller, cfg):
+    """rates [B, M] -> MinuteOut of [B, M]: the CPU blocked scan, one
+    lane per workload — the dispatch oracle for the fused-decide episode
+    kernel (compiled-program parity is ulp-tight, not bitwise; see the
+    episode_block module docstring)."""
+    from repro.sim.cluster import simulate
+    return jax.vmap(lambda r: simulate(r, controller, cfg,
+                                       plant_kernel=False))(rates)
+
+
+def gbdt_logits_ref(params, X):
+    """Host node-table inference — the oracle for the GBDT kernel (the
+    kernel runs the identical traversal over the identical layout, so
+    parity is bit-exact in interpret mode)."""
+    from repro.core.gbdt import predict_logits
+    return predict_logits(params, X)

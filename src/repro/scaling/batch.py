@@ -317,6 +317,7 @@ def make_batch_minute_step(controllers: Sequence[Controller],
 def make_batch_simulator(controllers: Sequence[Controller],
                          cfg: SimConfig = SimConfig(), *,
                          plant_kernel: bool | None = None,
+                         decide_kernel: bool | None = None,
                          shard: bool = True, w_chunk: int | None = None,
                          donate: bool = False, telemetry: bool = False,
                          trace_lanes: int | None = None):
@@ -327,6 +328,13 @@ def make_batch_simulator(controllers: Sequence[Controller],
     `make_simulator`; the fused-lane batch always uses the vector plant
     path, which IS the kernel's oracle.)
 
+    `decide_kernel` (auto on TPU, same dispatch as
+    ``cluster.make_simulator``) instead runs one fused-decide episode
+    kernel per controller over the W lanes — every policy's whole
+    episode on-chip (``repro.kernels.episode_block``), stacked back to
+    [P, W, M], still one compile. The off path is the unchanged fused
+    P x W scan. Incompatible with `telemetry` (decisions stay on-chip).
+
     `w_chunk` scans over chunks of the workload axis inside the same
     dispatch, so the live plant state is [P, w_chunk] however large W
     grows (the chunks are independent episodes; requires
@@ -335,13 +343,21 @@ def make_batch_simulator(controllers: Sequence[Controller],
     `telemetry` returns ``(MinuteOut [P, W, M], ControlTrace)`` with the
     trace time-major: decisions leaves [M, H, P, K], minutes leaves
     [M, P, K] (K = `trace_lanes` sampled lanes, all W when None);
-    incompatible with `w_chunk` (the fleet front door
-    ``repro.evals.fleet`` owns chunked capture).
+    incompatible with `w_chunk` — chunked capture is what
+    ``repro.evals.fleet`` is for: pass `trace_lanes` on its `FleetSpec`
+    to stream sampled-lane traces per chunk.
     """
     del plant_kernel
     if telemetry and w_chunk is not None:
-        raise ValueError("telemetry does not compose with w_chunk here; "
-                         "use repro.evals.fleet for chunked capture")
+        raise ValueError(
+            "telemetry does not compose with w_chunk here; for chunked "
+            "capture use repro.evals.fleet with trace_lanes "
+            "(FleetSpec(..., trace_lanes=K) samples K lanes per chunk)")
+    from repro.sim.cluster import (_reject_decide_kernel_telemetry,
+                                   _use_decide_kernel)
+    use_dk = _use_decide_kernel(decide_kernel)
+    if use_dk and telemetry:
+        _reject_decide_kernel_telemetry()
     ctrls = list(controllers)
     step = make_batch_minute_step(ctrls, cfg, shard=shard,
                                   telemetry=telemetry,
@@ -349,6 +365,10 @@ def make_batch_simulator(controllers: Sequence[Controller],
 
     def episode(rates):                       # [Wc, M] -> [P, Wc, M]
         W, M = rates.shape
+        if use_dk:
+            from repro.kernels import ops
+            outs = [ops.episode_block(rates, c, cfg) for c in ctrls]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
         def minute(carry, rate_w):
             state, idx = carry

@@ -46,6 +46,16 @@ def _nan() -> jax.Array:
     return jnp.float32(jnp.nan)
 
 
+def _select4(idx, v0, v1, v2, v3):
+    """Branch-free 4-way archetype select, bit-exact with ``table[idx]``
+    (it returns exactly one of the four values) but lowered as three
+    vector selects instead of a lane-dynamic gather — the form the fused
+    episode kernel (``repro.kernels.episode_block``) vectorizes."""
+    return jnp.where(idx == 0, v0,
+                     jnp.where(idx == 1, v1,
+                               jnp.where(idx == 2, v2, v3)))
+
+
 # ---------------------------------------------------------------- HPA ----
 class HPAState(NamedTuple):
     desired_buf: jax.Array  # ring buffer of recent desired counts
@@ -193,9 +203,10 @@ def aapa_controller(
             if forecast_confidence:
                 iv = fcst.forecast(fst, horizon_min)
                 conf = conf * fapi.interval_confidence(iv, conf_scale)
-            adj = uncertainty.adjust(conf, tab["target_cpu"][arch],
-                                     tab["cooldown_min"][arch],
-                                     tab["min_replicas"][arch])
+            adj = uncertainty.adjust(conf,
+                                     _select4(arch, *tab["target_cpu"]),
+                                     _select4(arch, *tab["cooldown_min"]),
+                                     _select4(arch, *tab["min_replicas"]))
             return AAPAState(fst, arch, conf, adj.target_cpu,
                              adj.cooldown_min, adj.min_replicas)
 
@@ -214,7 +225,7 @@ def aapa_controller(
                              obs.ready_total, reactive)
 
         # strategy components (paper Table III)
-        warm = tab["warm_pool"][state.arch]
+        warm = _select4(state.arch, *tab["warm_pool"])
         need_now = jnp.ceil(obs.rate_rps / cap)
         spike_d = need_now + warm + state.minrep_adj
 
@@ -229,7 +240,7 @@ def aapa_controller(
         mean_rps = jnp.mean(obs.rate_history[-15:]) / 60.0
         stat_d = jnp.ceil(mean_rps / cap)
 
-        strat = jnp.stack([periodic_d, spike_d, stat_d, ramp_d])[state.arch]
+        strat = _select4(state.arch, periodic_d, spike_d, stat_d, ramp_d)
         desired = jnp.maximum(jnp.maximum(reactive, strat),
                               jnp.maximum(state.minrep_adj, 1.0))
         return state, desired, state.cool_adj_min * 60.0

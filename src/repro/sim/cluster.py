@@ -597,6 +597,26 @@ def _use_plant_kernel(explicit: bool | None) -> bool:
     return explicit
 
 
+def _use_decide_kernel(explicit: bool | None) -> bool:
+    """Dispatch for the fused-decide episode kernel
+    (``repro.kernels.episode_block``): same scheme as
+    `_use_plant_kernel` — the kernel on TPU, the blocked scan below (its
+    oracle) elsewhere. The off path is the unmodified blocked scan, so
+    `decide_kernel=False` is bit-exact with not passing the flag at all
+    on CPU (pinned in tests/test_decide_kernel.py)."""
+    if explicit is None:
+        return jax.default_backend() == "tpu"
+    return explicit
+
+
+def _reject_decide_kernel_telemetry():
+    raise ValueError(
+        "telemetry does not compose with decide_kernel: the fused "
+        "episode kernel keeps decisions on-chip and never materializes "
+        "DecisionRecords; run with decide_kernel=False, or capture "
+        "sampled lanes via repro.evals.fleet (FleetSpec.trace_lanes)")
+
+
 #: Public minute-granularity step: carry=(SimState, minute_idx) -> per-
 #: minute MinuteOut scalars. `repro.evals.metrics` scans this directly to
 #: accumulate metrics in-carry without materializing [M] outputs. This is
@@ -609,18 +629,32 @@ minute_step_reference = _minute_reference
 def simulate(rates_per_min: jax.Array, controller: Controller,
              cfg: SimConfig = SimConfig(), *,
              plant_kernel: bool | None = None,
+             decide_kernel: bool | None = None,
              telemetry: bool = False) -> MinuteOut:
     """Simulate one workload. rates_per_min [M] -> MinuteOut of [M] arrays.
 
     Control-period-blocked: `decide` runs once per control interval
     (bit-exact with `simulate_reference`, which evaluates it every tick).
-    `plant_kernel=None` auto-selects the fused Pallas plant kernel on TPU.
+    `plant_kernel=None` auto-selects the fused Pallas plant kernel on TPU
+    for the decision-free ticks; `decide_kernel=None` auto-selects the
+    *whole-episode* fused kernel (``repro.kernels.episode_block``) on
+    TPU — plant ticks and `decide` both on-chip, this blocked scan as
+    its dispatch oracle. `decide_kernel` subsumes `plant_kernel` when
+    on.
 
     `telemetry=True` (static) additionally captures the in-scan decision
     trace and returns ``(MinuteOut, ControlTrace)`` with decisions
     leaves [M, H] (H block heads per minute) and minutes leaves [M];
     the default path compiles to the identical pre-telemetry program.
+    Incompatible with `decide_kernel` (decisions stay on-chip there).
     """
+    if _use_decide_kernel(decide_kernel):
+        if telemetry:
+            _reject_decide_kernel_telemetry()
+        from repro.kernels import ops
+        out = ops.episode_block(rates_per_min.astype(jnp.float32)[None],
+                                controller, cfg)
+        return jax.tree.map(lambda a: a[0], out)
     use_kernel = _use_plant_kernel(plant_kernel)
     (state, _), out = jax.lax.scan(
         partial(_minute_blocked, cfg, controller, use_kernel=use_kernel,
@@ -644,6 +678,7 @@ def simulate_reference(rates_per_min: jax.Array, controller: Controller,
 
 def make_simulator(controller: Controller, cfg: SimConfig = SimConfig(), *,
                    plant_kernel: bool | None = None,
+                   decide_kernel: bool | None = None,
                    w_chunk: int | None = None, donate: bool = False,
                    telemetry: bool = False):
     """jit(vmap(simulate)): rates [W, M] -> MinuteOut of [W, M] arrays.
@@ -655,10 +690,25 @@ def make_simulator(controller: Controller, cfg: SimConfig = SimConfig(), *,
     `donate` donates the rates buffer to the call, so a fleet-sized
     input tensor never double-buffers against the outputs. `telemetry`
     returns ``(MinuteOut [W, M], ControlTrace)`` with decisions leaves
-    [W, M, H] and minutes leaves [W, M]."""
-    fn = jax.vmap(lambda r: simulate(r, controller, cfg,
-                                     plant_kernel=plant_kernel,
-                                     telemetry=telemetry))
+    [W, M, H] and minutes leaves [W, M].
+
+    `decide_kernel` (auto on TPU, like `plant_kernel`) routes whole
+    episodes through the fused-decide Pallas kernel — the W lanes ARE
+    the kernel's lane tiles, so the vmap disappears and the episode is
+    one kernel launch per w-chunk inside the same single compile
+    (`_cache_size()` stays 1, pinned in tests/test_decide_kernel.py).
+    Incompatible with `telemetry` (decisions stay on-chip)."""
+    if _use_decide_kernel(decide_kernel):
+        if telemetry:
+            _reject_decide_kernel_telemetry()
+        from repro.kernels import ops
+        fn = lambda rates: ops.episode_block(  # noqa: E731
+            rates.astype(jnp.float32), controller, cfg)
+    else:
+        fn = jax.vmap(lambda r: simulate(r, controller, cfg,
+                                         plant_kernel=plant_kernel,
+                                         decide_kernel=False,
+                                         telemetry=telemetry))
 
     def run(rates):
         W, M = rates.shape

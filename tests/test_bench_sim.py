@@ -27,12 +27,15 @@ def _check_doc(doc, *, smoke):
     assert not doc["failed"]
     names = [r["name"] for r in doc["records"]]
     assert names == ["sim_blocked", "sim_batch", "sim_workloads",
-                     "sim_kernel"]
+                     "sim_kernel", "sim_fused_decide", "sim_gbdt_kernel"]
     for r in doc["records"]:
         assert set(r) == {"name", "us_per_call", "derived"}
         assert r["us_per_call"] > 0
     blocked = doc["records"][0]
     assert blocked["derived"].startswith("aapa_blocked_speedup=")
+    fused = doc["records"][4]
+    assert "_interpret_fused_vs_blocked=" in fused["derived"]
+    assert doc["records"][5]["derived"].startswith("lanes_per_sec=")
 
 
 @pytest.mark.slow
